@@ -1,0 +1,41 @@
+"""Fig 8b reproduction: diagonal pre-conditioner choice under the same
+clipping — Empirical Fisher vs GNB (Sophia-G) vs Hutchinson (Sophia-H)
+vs AdaHessian(EMA of squared estimates)."""
+import time
+
+from .common import csv_line, run_opt, val_loss
+
+
+def main(quick=False):
+    steps = 100 if quick else 150
+    lrs = (8e-4,) if quick else (8e-4, 2e-3)
+    runs = {
+        "sophia_g(gnb)": dict(optimizer="sophia_g", estimator="gnb",
+                              weight_decay=0.2),
+        "sophia_h(hutchinson)": dict(optimizer="sophia_h",
+                                     estimator="hutchinson",
+                                     weight_decay=0.2),
+        "ef+clip": dict(optimizer="sophia_g", estimator="empirical_fisher",
+                        weight_decay=0.2),
+        "adahessian": dict(optimizer="adahessian", estimator="hutchinson",
+                           hess_interval=1),
+    }
+    out = {}
+    for name, kw in runs.items():
+        t0 = time.time()
+        # per-arm LR grid (the paper tunes each method's LR separately)
+        best = None
+        opt = kw.pop("optimizer")
+        for lr in lrs:
+            st, _, wall = run_opt(opt, steps, peak_lr=lr, **kw)
+            l = val_loss(st)
+            if best is None or l < best[0]:
+                best = (l, lr)
+        out[name] = best[0]
+        csv_line(f"ablate_estimator.{name}", wall * 1e6 / steps,
+                 f"val={best[0]:.4f};lr={best[1]}")
+    return out
+
+
+if __name__ == "__main__":
+    print(main())

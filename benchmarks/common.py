@@ -1,0 +1,50 @@
+"""Shared benchmark setup: CPU-sized models + the paper's protocol."""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs.gpt2 import GPT2_TINY
+from repro.data import DataConfig, make_source
+from repro.train import TrainerConfig, train_loop
+
+
+def bench_source(seq=64, batch=8, vocab=None, seed=0):
+    return make_source(DataConfig(seq_len=seq, global_batch=batch,
+                                  vocab_size=vocab or GPT2_TINY.vocab_size,
+                                  seed=seed))
+
+
+def run_opt(optimizer, steps, *, peak_lr, seed=0, cfg=GPT2_TINY, src=None,
+            **tc_kw):
+    """Train `steps` with the schedule pinned to `steps` (paper eq. 14)."""
+    tc_kw.setdefault("hess_subbatch", 4)
+    tc_kw.setdefault("warmup_steps", max(2, steps // 20))
+    tc = TrainerConfig(optimizer=optimizer, peak_lr=peak_lr,
+                       total_steps=steps, seed=seed, **tc_kw)
+    src = src or bench_source(seed=seed)
+    t0 = time.time()
+    state, hist = train_loop(cfg, tc, src, num_steps=steps)
+    wall = time.time() - t0
+    return state, hist, wall
+
+
+def val_loss(state, cfg=GPT2_TINY, seed=1234, batches=4):
+    """Held-out loss on a disjoint synthetic stream."""
+    from repro.models import get_model
+    import jax.numpy as jnp
+    model = get_model(cfg)
+    src = bench_source(seed=seed)
+    losses = []
+    for b in range(batches):
+        batch = {k: jnp.asarray(v) for k, v in src.batch_at(10_000 + b).items()}
+        losses.append(float(model.loss_fn(cfg, state.params, batch)[0]))
+    return float(np.mean(losses))
+
+
+def csv_line(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")

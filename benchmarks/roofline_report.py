@@ -1,0 +1,62 @@
+"""Roofline table from the dry-run sweeps (EXPERIMENTS.md Section Roofline).
+
+Reads results/dryrun_single.json (+ _multi), prints the per-cell three-term
+roofline, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness, and a
+one-line what-would-help note.
+"""
+import json
+import os
+
+from .common import csv_line
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+_ADVICE = {
+    "memory": "fuse attention/update (cut HBM round-trips), raise arithmetic"
+              " intensity per byte",
+    "collective": "shard activations over model (sequence parallel), "
+                  "compress DP gradients, overlap collectives with scan",
+    "compute": "near roofline: raise MFU via remat policy / larger "
+               "microbatch",
+}
+
+
+def load(name):
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def report(rows, tag):
+    out = []
+    for r in rows:
+        if r.get("skipped"):
+            csv_line(f"roofline.{tag}.{r['arch']}.{r['shape']}", 0.0,
+                     "SKIP:" + r["skipped"][:60])
+            continue
+        if r.get("error"):
+            csv_line(f"roofline.{tag}.{r['arch']}.{r['shape']}", 0.0,
+                     "ERROR:" + r["error"][:60])
+            continue
+        t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        frac = r["t_compute_s"] / t * r.get("useful_flops_ratio", 0) if t else 0
+        csv_line(
+            f"roofline.{tag}.{r['arch']}.{r['shape']}", t * 1e6,
+            f"tc={r['t_compute_s']:.3f};tm={r['t_memory_s']:.3f};"
+            f"tcoll={r['t_collective_s']:.3f};dom={r['dominant']};"
+            f"useful={r.get('useful_flops_ratio', 0):.2f};"
+            f"roofline_frac={frac:.3f};mem={r['mem_peak_gb']:.1f}GB")
+        out.append(dict(r, roofline_frac=frac))
+    return out
+
+
+def main(quick=False):
+    single = report(load("dryrun_single.json"), "1pod")
+    multi = report(load("dryrun_multi.json"), "2pod")
+    return {"single_cells": len(single), "multi_cells": len(multi)}
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,59 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Paper artifact map:
+    Fig 2          -> toy_landscape
+    Fig 3          -> hessian_spectrum
+    Fig 1/4/5      -> steps_to_loss   (eq. 14 methodology)
+    Table 1        -> overhead
+    Fig 7a / Fig 9 -> stability
+    Fig 8a         -> ablate_k
+    Fig 8b         -> ablate_estimator
+    Fig 8c         -> ablate_clipping
+    Dry-run/roofline tables (EXPERIMENTS.md) -> roofline_report
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter runs (CI mode)")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    from . import (ablate_clipping, ablate_estimator, ablate_k,
+                   hessian_spectrum, overhead, roofline_report,
+                   stability, stability_lr, steps_to_loss, toy_landscape)
+
+    suites = {
+        "toy_landscape": toy_landscape.main,
+        "hessian_spectrum": hessian_spectrum.main,
+        "overhead": overhead.main,
+        "stability": stability.main,
+        "stability_lr": stability_lr.main,
+        "ablate_k": ablate_k.main,
+        "ablate_estimator": ablate_estimator.main,
+        "ablate_clipping": ablate_clipping.main,
+        "steps_to_loss": steps_to_loss.main,
+        "roofline_report": roofline_report.main,
+    }
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites.items():
+        if args.only and name not in args.only:
+            continue
+        try:
+            fn(quick=args.quick)
+        except Exception as e:  # keep the harness running
+            traceback.print_exc()
+            failures.append(name)
+            print(f"{name},0.0,ERROR:{repr(e)[:120]}")
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

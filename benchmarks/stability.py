@@ -1,0 +1,45 @@
+"""Fig 7a + Fig 9 reproduction: training-stability telemetry.
+
+* Fig 7a: fraction of steps where global-norm gradient clipping (threshold
+  1.0) triggers — Sophia rarely, AdamW/Lion frequently.
+* Fig 9a: proportion of Sophia coordinates whose update is clipped
+  (the gamma-tuning signal; paper: ~50-90% when effective).
+* Fig 9b: ||h_t|| growth over training.
+"""
+import time
+
+import jax
+import numpy as np
+
+from .common import bench_source, csv_line, run_opt
+
+
+def main(quick=False):
+    steps = 100 if quick else 200
+    t0 = time.time()
+    out = {}
+    for opt, lr, wd in (("sophia_g", 8e-4, 0.2), ("adamw", 1e-3, 0.1),
+                        ("lion", 3e-4, 0.2)):
+        state, hist, _ = run_opt(opt, steps, peak_lr=lr, weight_decay=wd,
+                                 grad_clip=1.0)  # paper threshold
+        # paper Fig 7a concerns steady-state stability: rate that clipping
+        # triggers AFTER the init transient (second half of the run)
+        half = steps // 2
+        trig = (hist[-1]["clip_triggers"] - hist[half]["clip_triggers"]) \
+            / (steps - half - 1)
+        out[opt] = {"clip_trigger_rate_late": trig}
+        if opt == "sophia_g":
+            cf = [h["sophia_clip_fraction"] for h in hist if
+                  "sophia_clip_fraction" in h]
+            hnorm = float(jax.numpy.sqrt(sum(
+                (x.astype(jax.numpy.float32) ** 2).sum()
+                for x in jax.tree.leaves(state.opt_state.h))))
+            out[opt]["sophia_clip_fraction_final"] = float(np.mean(cf[-10:]))
+            out[opt]["h_norm_final"] = hnorm
+        csv_line(f"stability.{opt}", (time.time() - t0) * 1e6 / steps,
+                 ";".join(f"{k}={v:.4f}" for k, v in out[opt].items()))
+    return out
+
+
+if __name__ == "__main__":
+    print(main())

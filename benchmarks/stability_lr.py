@@ -1,0 +1,67 @@
+"""Fig 7b probe: maximum stable learning rate with/without the
+attention-temperature trick (Karamcheti/Mistral).
+
+VERDICT AT CPU SCALE: not falsifiable.  The paper's instability (AdamW
+needing QK scaling by inverse layer index to reach 3e-4 on 355M/24L)
+arises from attention-entropy collapse at depth and width we cannot reach
+on CPU; at toy scale (12L, d=128) global-norm clipping keeps AdamW
+"stable" at any LR while sign-like Sophia steps degrade a tiny model at
+absurd LRs (0.1+) for unrelated reasons.  We report the ladder measured
+and mark the claim as requiring model scale — the trick itself is
+implemented (`attn_temperature_by_layer`) and unit-tested
+(tests/test_models.py::test_attention_temperature_trick).
+"""
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs.gpt2 import _gpt2
+from repro.data import DataConfig, make_source
+from repro.train import TrainerConfig, train_loop
+
+from .common import csv_line
+
+CFG = _gpt2("gpt2-deep", 128, 8, 4, ctx=128, vocab=512)
+LADDER = (1e-3, 3e-3, 1e-2, 3e-2)
+
+
+def _stable(optimizer, lr, trick, steps):
+    cfg = dataclasses.replace(CFG, attn_temperature_by_layer=trick)
+    tc = TrainerConfig(optimizer=optimizer, peak_lr=lr, total_steps=steps,
+                       warmup_steps=2, hess_subbatch=4,
+                       weight_decay=0.1 if optimizer == "adamw" else 0.2)
+    src = make_source(DataConfig(seq_len=64, global_batch=8,
+                                 vocab_size=cfg.vocab_size, seed=0))
+    _, hist = train_loop(cfg, tc, src, num_steps=steps)
+    losses = [h["loss"] for h in hist]
+    return np.isfinite(losses[-1]) and losses[-1] < losses[0] + 1.0
+
+
+def max_stable_lr(optimizer, trick, steps):
+    best = 0.0
+    for lr in LADDER:
+        if _stable(optimizer, lr, trick, steps):
+            best = lr
+        else:
+            break
+    return best
+
+
+def main(quick=False):
+    steps = 25 if quick else 40
+    t0 = time.time()
+    rows = {
+        "adamw_no_trick": max_stable_lr("adamw", False, steps),
+        "adamw_with_trick": max_stable_lr("adamw", True, steps),
+        "sophia_no_trick": max_stable_lr("sophia_g", False, steps),
+    }
+    us = (time.time() - t0) * 1e6 / (3 * len(LADDER) * steps)
+    csv_line("stability_lr.max_stable", us,
+             ";".join(f"{k}={v}" for k, v in rows.items())
+             + ";verdict=not_falsifiable_at_toy_scale(see module docstring)")
+    return rows
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,69 @@
+"""Fault tolerance demo: train, 'crash', auto-resume from the latest
+checkpoint, finish — final params are bit-identical to an uninterrupted
+run (stateless data pipeline + full optimizer-state checkpointing).
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs.gpt2 import GPT2_TINY
+from repro.data import DataConfig, make_source
+from repro.train import TrainerConfig, checkpoint as ckpt, train_loop
+from repro.train.elastic import run_resumable
+
+cfg = GPT2_TINY
+tc = TrainerConfig(optimizer="sophia_g", peak_lr=8e-4, total_steps=24,
+                   warmup_steps=2, hess_interval=5, hess_subbatch=4)
+src = make_source(DataConfig(seq_len=32, global_batch=4,
+                             vocab_size=cfg.vocab_size, seed=0))
+ckpt_dir = tempfile.mkdtemp(prefix="elastic_demo_")
+TOTAL = 24
+crashes = {"remaining": 2}
+
+
+def make_state():
+    from repro.train import make_train_fns
+    init_fn, *_ = make_train_fns(cfg, tc)
+    return init_fn(jax.random.PRNGKey(0))
+
+
+def restore_latest():
+    step = ckpt.latest_step(ckpt_dir)
+    if step is None:
+        return None
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        make_state())
+    state, step = ckpt.restore(ckpt_dir, like)
+    print(f"  [resume] from step {step}")
+    return state, step
+
+
+def run(state, start):
+    for t in range(start, TOTAL, 6):
+        state, hist = train_loop(cfg, tc, src, num_steps=min(6, TOTAL - t),
+                                 state=state, start_step=t)
+        ckpt.save(ckpt_dir, t + 6, state)
+        if crashes["remaining"] > 0 and t + 6 < TOTAL:
+            crashes["remaining"] -= 1
+            print(f"  [boom] simulated node failure after step {t + 6}")
+            raise RuntimeError("node failure")
+    return state
+
+
+state = run_resumable(make_state, run, restore_latest, max_restarts=5)
+
+# verify against an uninterrupted run
+clean, _ = train_loop(cfg, tc, src, num_steps=TOTAL)
+a = jax.flatten_util.ravel_pytree(state.params)[0]
+b = jax.flatten_util.ravel_pytree(clean.params)[0]
+err = float(abs(np.asarray(a) - np.asarray(b)).max())
+print(f"max |resumed - uninterrupted| = {err:.2e}  (exact resume: {err < 1e-5})")
+shutil.rmtree(ckpt_dir, ignore_errors=True)

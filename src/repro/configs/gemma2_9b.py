@@ -1,0 +1,22 @@
+"""gemma2-9b [dense] — 42L d_model=3584 16H (GQA kv=8) d_ff=14336
+vocab=256000; local+global alternating attention (window 4096), logit
+softcaps (attn 50, final 30), sandwich norms, GeGLU.  [arXiv:2408.00118; hf]"""
+from ..models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b", family="dense",
+    n_layers=42, d_model=3584, n_heads=16, n_kv_heads=8, d_ff=14336,
+    vocab_size=256000, head_dim=256,
+    rope=True, local_global_pattern="alternating", local_window=4096,
+    attn_logit_softcap=50.0, final_logit_softcap=30.0, post_norms=True,
+    activation="geglu", tie_embeddings=True, embed_scale=True,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="gemma2-9b-smoke", family="dense",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=160,
+    vocab_size=512, head_dim=16,
+    rope=True, local_global_pattern="alternating", local_window=16,
+    attn_logit_softcap=50.0, final_logit_softcap=30.0, post_norms=True,
+    activation="geglu", tie_embeddings=True, embed_scale=True,
+)

@@ -1,0 +1,125 @@
+"""Assigned input shapes + per-(arch, shape) input_specs.
+
+Shapes (LM family, seq_len x global_batch):
+    train_4k     4,096 x 256   train_step
+    prefill_32k  32,768 x 32   prefill step (forward + KV-cache fill)
+    decode_32k   32,768 x 128  serve_step: 1 new token, cache of seq_len
+    long_500k    524,288 x 1   serve_step; ONLY bounded-state archs
+                               (rwkv6, recurrentgemma) — full-attention archs
+                               are skipped with reason (DESIGN.md §4)
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, zero allocation), plus which step function the
+cell lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig
+from ..models import encdec as encdec_mod
+from ..models import griffin as griffin_mod
+from ..models import rwkv as rwkv_mod
+from ..models import transformer as tf_mod
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+BOUNDED_STATE_FAMILIES = ("rwkv", "griffin")
+N_PATCHES = 256          # qwen2-vl stub: one 256-patch image per sequence
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape_name == "long_500k" and cfg.family not in BOUNDED_STATE_FAMILIES:
+        return False, ("full-attention KV state is unbounded at 524k; "
+                       "long_500k runs only for SSM/hybrid archs "
+                       "(DESIGN.md §4)")
+    return True, ""
+
+
+@dataclasses.dataclass
+class Cell:
+    kind: str                     # train | prefill | decode
+    specs: dict                   # kwargs of the step function (SDS trees)
+    note: str = ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _token_batch(cfg, B, S):
+    return {"tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Optional[Cell]:
+    """Build the dry-run cell for (arch, shape); None if inapplicable."""
+    ok, _ = applicable(cfg, shape_name)
+    if not ok:
+        return None
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    i32 = jnp.int32
+
+    if kind == "train":
+        batch = _token_batch(cfg, B, S)
+        if cfg.patch_embed_input:
+            batch["patch_embeds"] = _sds((B, N_PATCHES, cfg.d_model),
+                                         jnp.float32)
+            batch["mask"] = _sds((B, S), jnp.float32)
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((B, S, cfg.d_model), jnp.float32)
+        return Cell(kind="train", specs={"batch": batch})
+
+    if kind == "prefill":
+        specs = {"tokens": _sds((B, S), i32)}
+        if cfg.patch_embed_input:
+            specs["patch_embeds"] = _sds((B, N_PATCHES, cfg.d_model),
+                                         jnp.float32)
+        if cfg.family == "encdec":
+            specs = {"frames": _sds((B, S, cfg.d_model), jnp.float32),
+                     "cache": jax.eval_shape(
+                         lambda: encdec_mod.init_cache(cfg, B, S, S))}
+        if cfg.family == "rwkv":
+            specs["state"] = jax.eval_shape(
+                lambda: rwkv_mod.init_state(cfg, B))
+        return Cell(kind="prefill", specs=specs)
+
+    # decode
+    tokens = _sds((B, 1), i32)
+    if cfg.family in ("dense", "moe"):
+        cache = jax.eval_shape(lambda: tf_mod.init_cache(cfg, B, S))
+        return Cell(kind="decode",
+                    specs={"cache": cache, "tokens": tokens,
+                           "position": S - 1})
+    if cfg.family == "rwkv":
+        state = jax.eval_shape(lambda: rwkv_mod.init_state(cfg, B))
+        return Cell(kind="decode",
+                    specs={"cache": state, "tokens": tokens,
+                           "position": S - 1},
+                    note="O(1) recurrent state; cache size independent of "
+                         f"context {S}")
+    if cfg.family == "griffin":
+        state = jax.eval_shape(lambda: griffin_mod.init_state(cfg, B))
+        return Cell(kind="decode",
+                    specs={"cache": state, "tokens": tokens,
+                           "position": S - 1},
+                    note=f"bounded state: RG-LRU h + {cfg.local_window}-token "
+                         "rolling window")
+    if cfg.family == "encdec":
+        cache = jax.eval_shape(lambda: encdec_mod.init_cache(cfg, B, S, S))
+        return Cell(kind="decode",
+                    specs={"cache": cache, "tokens": tokens,
+                           "position": S - 1})
+    raise ValueError(cfg.family)

@@ -1,0 +1,29 @@
+"""repro.core — Sophia (the paper's contribution) + optimizer substrate.
+
+Public API:
+    sophia, sophia_h, sophia_g          — Algorithm 3
+    hutchinson_estimator, gnb_estimator — Section 2.3 estimators
+    adamw, lion, signgd, adahessian     — paper baselines
+    clip_by_global_norm                 — stability telemetry (Fig 7a)
+    linear_warmup_cosine                — paper LR protocol
+"""
+from .types import (GradientTransformation, HessianAwareTransformation,
+                    apply_updates, chain, global_norm, tree_zeros_like)
+from .sophia import (SophiaState, scale_by_sophia, sophia, sophia_g, sophia_h)
+from .estimators import (empirical_fisher_estimator, exact_diag_hessian,
+                         gnb_estimator, hutchinson_estimator, sample_labels,
+                         subsample_batch)
+from .baselines import adahessian, adamw, lion, sgd, signgd
+from .clipping import ClipState, clip_by_global_norm, clip_trigger_rate
+from .schedule import (constant, inverse_sqrt, linear_warmup_cosine,
+                       linear_warmup_linear_decay)
+
+OPTIMIZERS = {
+    "sophia_h": sophia_h,
+    "sophia_g": sophia_g,
+    "adamw": adamw,
+    "lion": lion,
+    "signgd": signgd,
+    "adahessian": adahessian,
+    "sgd": sgd,
+}

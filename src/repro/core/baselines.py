@@ -1,0 +1,177 @@
+"""Baseline optimizers the paper compares against (Section 3.1).
+
+AdamW (Loshchilov & Hutter), Lion (Chen et al. 2023), SignGD-with-momentum
+(the paper's simplified-Adam / "Clip" ablation), AdaHessian (Yao et al. 2021,
+EMA of *squared* Hessian estimates in the denominator), and plain SGD.
+
+All are pure-JAX GradientTransformations sharing the protocol in
+:mod:`repro.core.types`, so the trainer is optimizer-agnostic.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from .types import (GradientTransformation, HessianAwareTransformation,
+                    PyTree, Schedule, tree_zeros_like)
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else lr
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    m: PyTree
+    v: PyTree
+
+
+def adamw(learning_rate: Union[float, Schedule], *, beta1: float = 0.9,
+          beta2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> GradientTransformation:
+    """AdamW with the paper's LM defaults (b1=0.9, b2=0.95, wd=0.1)."""
+
+    def init(params):
+        return AdamWState(jnp.zeros([], jnp.int32),
+                          tree_zeros_like(params, jnp.float32),
+                          tree_zeros_like(params, jnp.float32))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        m = jax.tree.map(lambda m_, g: beta1 * m_ + (1 - beta1) * g.astype(jnp.float32),
+                         state.m, grads)
+        v = jax.tree.map(lambda v_, g: beta2 * v_ + (1 - beta2)
+                         * jnp.square(g.astype(jnp.float32)), state.v, grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - beta1 ** c
+        bc2 = 1 - beta2 ** c
+        lr = _lr_at(learning_rate, state.count)
+        updates = jax.tree.map(
+            lambda m_, v_, p: -lr * ((m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+                                     + weight_decay * p.astype(jnp.float32)),
+            m, v, params)
+        return updates, AdamWState(count, m, v)
+
+    return GradientTransformation(init=init, update=update)
+
+
+class LionState(NamedTuple):
+    count: jnp.ndarray
+    m: PyTree
+
+
+def lion(learning_rate: Union[float, Schedule], *, beta1: float = 0.95,
+         beta2: float = 0.98, weight_decay: float = 0.2) -> GradientTransformation:
+    """Lion (paper's LM tuning: b1=0.95, b2=0.98, wd=0.2)."""
+
+    def init(params):
+        return LionState(jnp.zeros([], jnp.int32),
+                         tree_zeros_like(params, jnp.float32))
+
+    def update(grads, state, params=None):
+        lr = _lr_at(learning_rate, state.count)
+        updates = jax.tree.map(
+            lambda m_, g, p: -lr * (jnp.sign(beta1 * m_ + (1 - beta1)
+                                             * g.astype(jnp.float32))
+                                    + weight_decay * p.astype(jnp.float32)),
+            state.m, grads, params)
+        m = jax.tree.map(lambda m_, g: beta2 * m_ + (1 - beta2) * g.astype(jnp.float32),
+                         state.m, grads)
+        return updates, LionState(state.count + 1, m)
+
+    return GradientTransformation(init=init, update=update)
+
+
+class SignGDState(NamedTuple):
+    count: jnp.ndarray
+    m: PyTree
+
+
+def signgd(learning_rate: Union[float, Schedule], *, beta1: float = 0.96,
+           weight_decay: float = 0.0) -> GradientTransformation:
+    """Stochastic momentum SignSGD — the 'Clip' ablation in Fig 8c and the
+    fallback Sophia reduces to when curvature is untrusted."""
+
+    def init(params):
+        return SignGDState(jnp.zeros([], jnp.int32),
+                           tree_zeros_like(params, jnp.float32))
+
+    def update(grads, state, params=None):
+        m = jax.tree.map(lambda m_, g: beta1 * m_ + (1 - beta1) * g.astype(jnp.float32),
+                         state.m, grads)
+        lr = _lr_at(learning_rate, state.count)
+        updates = jax.tree.map(
+            lambda m_, p: -lr * (jnp.sign(m_) + weight_decay * p.astype(jnp.float32)),
+            m, params)
+        return updates, SignGDState(state.count + 1, m)
+
+    return GradientTransformation(init=init, update=update)
+
+
+class AdaHessianState(NamedTuple):
+    count: jnp.ndarray
+    m: PyTree
+    v: PyTree  # EMA of squared Hessian-diagonal estimates
+
+
+def adahessian(learning_rate: Union[float, Schedule], *, beta1: float = 0.92,
+               beta2: float = 0.99, eps: float = 1e-8,
+               weight_decay: float = 0.0) -> HessianAwareTransformation:
+    """AdaHessian: Adam-like but the denominator is sqrt(EMA(hhat^2)).
+
+    Hessian-aware: the trainer feeds it the same Hutchinson estimates as
+    Sophia-H (paper tunes b1=0.92, b2=0.99; needs estimates every step to be
+    stable — Fig 8c shows divergence at k=2 without clipping).
+    """
+
+    def init(params):
+        return AdaHessianState(jnp.zeros([], jnp.int32),
+                               tree_zeros_like(params, jnp.float32),
+                               tree_zeros_like(params, jnp.float32))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        m = jax.tree.map(lambda m_, g: beta1 * m_ + (1 - beta1) * g.astype(jnp.float32),
+                         state.m, grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - beta1 ** c
+        bc2 = 1 - beta2 ** c
+        lr = _lr_at(learning_rate, state.count)
+        updates = jax.tree.map(
+            lambda m_, v_, p: -lr * ((m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+                                     + weight_decay * p.astype(jnp.float32)),
+            m, state.v, params)
+        return updates, AdaHessianState(count, m, state.v)
+
+    def update_hessian(hess, state):
+        v = jax.tree.map(
+            lambda v_, h: beta2 * v_ + (1 - beta2) * jnp.square(h.astype(jnp.float32)),
+            state.v, hess)
+        return state._replace(v=v)
+
+    return HessianAwareTransformation(init=init, update=update,
+                                      update_hessian=update_hessian)
+
+
+class SGDState(NamedTuple):
+    count: jnp.ndarray
+    m: PyTree
+
+
+def sgd(learning_rate: Union[float, Schedule], *, momentum: float = 0.0
+        ) -> GradientTransformation:
+    def init(params):
+        return SGDState(jnp.zeros([], jnp.int32),
+                        tree_zeros_like(params, jnp.float32))
+
+    def update(grads, state, params=None):
+        del params
+        m = jax.tree.map(lambda m_, g: momentum * m_ + g.astype(jnp.float32),
+                         state.m, grads)
+        lr = _lr_at(learning_rate, state.count)
+        updates = jax.tree.map(lambda m_: -lr * m_, m)
+        return updates, SGDState(state.count + 1, m)
+
+    return GradientTransformation(init=init, update=update)

@@ -1,0 +1,200 @@
+"""Sophia: Second-order Clipped Stochastic Optimization (Algorithm 3).
+
+Faithful to the paper:
+
+    m_t = beta1 * m_{t-1} + (1 - beta1) * g_t
+    if t % k == 1:  h_t = beta2 * h_{t-k} + (1 - beta2) * hhat_t   (out-of-band)
+    theta <- theta - lr * weight_decay * theta                      (decoupled WD)
+    theta <- theta - lr * clip(m_t / max(gamma * h_t, eps), 1)
+
+The Hessian EMA refresh is exposed as ``update_hessian`` so the trainer can
+invoke it every ``k`` steps with a fresh estimate from
+:mod:`repro.core.estimators` — exactly the split in Algorithm 3 lines 7-11.
+
+Telemetry: the state carries ``clip_fraction`` (fraction of coordinates whose
+update hit the clip), the quantity the paper uses to tune ``gamma``
+(Section 3.1: target "proportion NOT clipped" in 10%-50%, i.e. clip fraction
+50%-90%, Figure 9a).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from .types import (GradientTransformation, HessianAwareTransformation, PyTree,
+                    Schedule, apply_updates, tree_zeros_like)
+
+
+class SophiaState(NamedTuple):
+    count: jnp.ndarray          # step counter t
+    m: PyTree                   # EMA of gradients
+    h: PyTree                   # EMA of diagonal-Hessian estimates
+    hess_count: jnp.ndarray     # number of hessian refreshes so far
+    clip_fraction: jnp.ndarray  # telemetry: fraction of clipped coords last step
+
+
+def scale_by_sophia(
+    beta1: float = 0.96,
+    beta2: float = 0.99,
+    gamma: float = 0.05,
+    eps: float = 1e-12,
+    clip_threshold: float = 1.0,
+    state_dtype=jnp.float32,
+) -> HessianAwareTransformation:
+    """The preconditioning core of Sophia (no LR / WD — see :func:`sophia`)."""
+
+    def init(params):
+        return SophiaState(
+            count=jnp.zeros([], jnp.int32),
+            m=tree_zeros_like(params, state_dtype),
+            h=tree_zeros_like(params, state_dtype),
+            hess_count=jnp.zeros([], jnp.int32),
+            clip_fraction=jnp.zeros([], jnp.float32),
+        )
+
+    def update(grads, state, params=None):
+        del params
+        m = jax.tree.map(
+            lambda m_, g: beta1 * m_ + (1.0 - beta1) * g.astype(m_.dtype),
+            state.m, grads)
+
+        def precondition(m_, h_):
+            raw = m_ / jnp.maximum(gamma * h_, eps)
+            u = jnp.clip(raw, -clip_threshold, clip_threshold)
+            n_clipped = jnp.sum(jnp.abs(raw) >= clip_threshold,
+                                dtype=jnp.float32)  # fp32: >2^31 params
+            return -u, n_clipped
+
+        out = jax.tree.map(precondition, m, state.h)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        clipped = sum(
+            jax.tree.leaves(
+                jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple)))
+        ).astype(jnp.float32)
+        total = float(sum(x.size for x in jax.tree.leaves(m)))
+        new_state = SophiaState(
+            count=state.count + 1, m=m, h=state.h,
+            hess_count=state.hess_count,
+            clip_fraction=(clipped / total).astype(jnp.float32),
+        )
+        return updates, new_state
+
+    def update_hessian(hess_estimate, state):
+        """EMA per eq. (5): h <- beta2 * h + (1-beta2) * hhat."""
+        h = jax.tree.map(
+            lambda h_, e: beta2 * h_ + (1.0 - beta2) * e.astype(h_.dtype),
+            state.h, hess_estimate)
+        return state._replace(h=h, hess_count=state.hess_count + 1)
+
+    return HessianAwareTransformation(init=init, update=update,
+                                      update_hessian=update_hessian)
+
+
+class ScaleByLrState(NamedTuple):
+    count: jnp.ndarray
+
+
+def scale_by_learning_rate(lr: Union[float, Schedule]) -> GradientTransformation:
+    def init(params):
+        del params
+        return ScaleByLrState(count=jnp.zeros([], jnp.int32))
+
+    def update(updates, state, params=None):
+        del params
+        step_lr = lr(state.count) if callable(lr) else lr
+        updates = jax.tree.map(lambda u: step_lr * u, updates)
+        return updates, ScaleByLrState(count=state.count + 1)
+
+    return GradientTransformation(init=init, update=update)
+
+
+class WeightDecayState(NamedTuple):
+    count: jnp.ndarray
+
+
+def add_decayed_weights(weight_decay: float,
+                        lr: Union[float, Schedule, None] = None
+                        ) -> GradientTransformation:
+    """Decoupled weight decay (AdamW-style): update -= lr * wd * theta.
+
+    When ``lr`` is given the decay is pre-multiplied by the schedule so it can
+    sit *before* no further lr scaling (Sophia line 12 decays with eta_t).
+    """
+
+    def init(params):
+        del params
+        return WeightDecayState(count=jnp.zeros([], jnp.int32))
+
+    def update(updates, state, params=None):
+        assert params is not None, "weight decay needs params"
+        step_lr = (lr(state.count) if callable(lr) else lr) if lr is not None else 1.0
+        updates = jax.tree.map(
+            lambda u, p: u - step_lr * weight_decay * p.astype(u.dtype),
+            updates, params)
+        return updates, WeightDecayState(count=state.count + 1)
+
+    return GradientTransformation(init=init, update=update)
+
+
+def sophia(
+    learning_rate: Union[float, Schedule],
+    *,
+    beta1: float = 0.96,
+    beta2: float = 0.99,
+    gamma: float = 0.05,
+    eps: float = 1e-12,
+    weight_decay: float = 0.2,
+    clip_threshold: float = 1.0,
+    state_dtype=jnp.float32,
+) -> HessianAwareTransformation:
+    """Full Sophia optimizer (Algorithm 3), estimator supplied externally.
+
+    Usage::
+
+        opt = sophia(lr_schedule, gamma=0.05)             # Sophia-G defaults
+        state = opt.init(params)
+        # every step:
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+        # every k steps (Algorithm 3 line 7):
+        hhat = gnb_estimator(...) or hutchinson_estimator(...)
+        state = opt.update_hessian(hhat, state)
+    """
+    core = scale_by_sophia(beta1=beta1, beta2=beta2, gamma=gamma, eps=eps,
+                           clip_threshold=clip_threshold,
+                           state_dtype=state_dtype)
+
+    def init(params):
+        return core.init(params)
+
+    def update(grads, state, params=None):
+        updates, state = core.update(grads, state, params)
+        step = state.count - 1  # lr uses the pre-increment step index
+        step_lr = learning_rate(step) if callable(learning_rate) else learning_rate
+        # decoupled weight decay, then scale the clipped update by lr
+        updates = jax.tree.map(
+            lambda u, p: step_lr * (u - weight_decay * p.astype(u.dtype)),
+            updates, params)
+        return updates, state
+
+    def update_hessian(hess, state):
+        return core.update_hessian(hess, state)
+
+    return HessianAwareTransformation(init=init, update=update,
+                                      update_hessian=update_hessian)
+
+
+def sophia_h(learning_rate, *, gamma: float = 0.01, weight_decay: float = 0.2,
+             **kw) -> HessianAwareTransformation:
+    """Sophia with the paper's Sophia-H default gamma=0.01."""
+    return sophia(learning_rate, gamma=gamma, weight_decay=weight_decay, **kw)
+
+
+def sophia_g(learning_rate, *, gamma: float = 0.05, weight_decay: float = 0.2,
+             **kw) -> HessianAwareTransformation:
+    """Sophia with the paper's Sophia-G default gamma=0.05."""
+    return sophia(learning_rate, gamma=gamma, weight_decay=weight_decay, **kw)

@@ -1,0 +1,95 @@
+"""Minimal optax-style optimizer protocol in pure JAX.
+
+optax is not available offline, so we implement the same
+``GradientTransformation`` contract: ``init(params) -> state`` and
+``update(grads, state, params) -> (updates, state)``.  Updates are *added*
+to params by ``apply_updates`` (i.e. they already carry the minus sign).
+
+The Sophia-specific extension is ``HessianAware``: transformations that
+consume a diagonal-Hessian estimate expose ``update_hessian(hess, state)``
+which refreshes the EMA'd curvature state out-of-band (every k steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> lr
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientTransformation:
+    """A pair of pure functions (init, update)."""
+
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], tuple]
+
+
+@dataclasses.dataclass(frozen=True)
+class HessianAwareTransformation(GradientTransformation):
+    """GradientTransformation that also consumes diagonal-Hessian estimates.
+
+    ``update_hessian(hess_estimate, state) -> state`` folds a fresh stochastic
+    estimate of diag(H) into the optimizer state (EMA per Sophia eq. (5)).
+    """
+
+    update_hessian: Callable[[PyTree, PyTree], PyTree] = None
+
+
+class EmptyState(NamedTuple):
+    pass
+
+
+def tree_zeros_like(params: PyTree, dtype=None) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def tree_map2(f, a, b):
+    return jax.tree.map(f, a, b)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    """params + updates, preserving param dtypes (updates may be fp32)."""
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    """Compose transforms left-to-right (like optax.chain).
+
+    Hessian-awareness propagates: ``update_hessian`` is forwarded to every
+    member that defines it; state is a tuple of member states.
+    """
+
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    def update_hessian(hess, state):
+        new_state = []
+        for t, s in zip(transforms, state):
+            if isinstance(t, HessianAwareTransformation) and t.update_hessian is not None:
+                s = t.update_hessian(hess, s)
+            new_state.append(s)
+        return tuple(new_state)
+
+    if any(isinstance(t, HessianAwareTransformation) for t in transforms):
+        return HessianAwareTransformation(init=init, update=update,
+                                          update_hessian=update_hessian)
+    return GradientTransformation(init=init, update=update)

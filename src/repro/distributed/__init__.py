@@ -1,0 +1,4 @@
+from .sharding import (batch_specs, cache_specs, constrain, fsdp_axis,
+                       param_shardings, partition_params,
+                       set_activation_mesh, to_shardings)
+from .compression import CompressionState, GradCompressor, compressed_bytes

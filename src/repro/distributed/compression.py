@@ -1,0 +1,88 @@
+"""Gradient compression for data-parallel reduction at 1000+ node scale.
+
+Beyond-paper lever (DESIGN.md §5): int8 block-quantized gradients with
+per-block fp32 scales and *error feedback* (the quantization residual is
+carried into the next step), cutting DP all-reduce bytes ~4x vs fp32 /
+~2x vs bf16.  Unbiasedness is preserved in expectation by stochastic
+rounding; error feedback bounds the bias accumulation (Karimireddy et al.).
+
+Usage (wraps any GradientTransformation's input):
+
+    comp = GradCompressor(block=256)
+    cstate = comp.init(grads_shape)
+    grads_q, cstate = comp.roundtrip(grads, cstate, rng)   # quantize+dequant
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class CompressionState(NamedTuple):
+    error: PyTree  # error-feedback residuals, same structure as grads
+
+
+def _quantize(x, block: int, rng):
+    """int8 block quantization with stochastic rounding.
+
+    Returns (q int8, scales fp32, dequantized fp32)."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    scaled = blocks / scale
+    noise = jax.random.uniform(rng, scaled.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:x.size].reshape(x.shape)
+    return q, scale, deq
+
+
+class GradCompressor:
+    def __init__(self, block: int = 256):
+        self.block = block
+
+    def init(self, grads: PyTree) -> CompressionState:
+        return CompressionState(
+            error=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                               grads))
+
+    def roundtrip(self, grads: PyTree, state: CompressionState,
+                  rng) -> tuple[PyTree, CompressionState]:
+        """Simulate the compressed all-reduce: returns the gradients as the
+        receiving end would see them, plus updated error feedback.
+
+        In the jitted train step the quantize happens *before* the psum and
+        the dequantize after; XLA then moves int8 bytes over ICI.  Here the
+        roundtrip form keeps the math identical while staying mesh-agnostic.
+        """
+        leaves, treedef = jax.tree.flatten(grads)
+        keys = jax.random.split(rng, len(leaves))
+        keys = jax.tree.unflatten(treedef, list(keys))
+
+        def one(g, e, k):
+            g32 = g.astype(jnp.float32) + e
+            _, _, deq = _quantize(g32, self.block, k)
+            return deq, g32 - deq
+
+        out = jax.tree.map(one, grads, state.error, keys)
+        deq = jax.tree.map(lambda o: o[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        err = jax.tree.map(lambda o: o[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        return deq, CompressionState(error=err)
+
+
+def compressed_bytes(grads: PyTree, block: int = 256) -> int:
+    """Bytes on the wire for the compressed representation (int8 + scales)."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        n = g.size
+        nblocks = -(-n // block)
+        total += n + nblocks * 4
+    return total

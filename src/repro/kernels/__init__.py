@@ -1,0 +1,4 @@
+# TPU hot-spot kernels for the paper's contribution: the fused Sophia
+# optimizer step (pl.pallas_call + BlockSpec VMEM tiling).  ops.py = jit'd
+# wrappers, ref.py = pure-jnp oracles, sophia_update.py = the kernels.
+from . import ops, ref

@@ -1,0 +1,123 @@
+"""Flash attention Pallas TPU kernel (beyond-paper §Perf lever).
+
+The dry-run showed every 32k prefill cell is memory-bound on attention:
+XLA materializes each (S, kv_block) score tile through HBM (~5 passes per
+tile), so attention traffic is O(S^2) bytes.  This kernel keeps the online
+softmax entirely in VMEM scratch — HBM traffic becomes Q+K+V+O only.
+
+Layout: q (B, H, S, hd), k/v (B, Hkv, S, hd) with GQA mapping h -> h//G in
+the BlockSpec index map.  Grid (B, H, S/BQ, S/BK); the KV dimension is the
+innermost ("arbitrary") axis and accumulates via VMEM scratch, initialized
+at ki == 0 and flushed to the output block at the last ki.  Causal masking
+uses global block offsets; fully-masked tiles short-circuit.
+
+Validated under interpret=True against kernels/ref.py (flash_attention_ref)
+over a shape/GQA/causality sweep in tests/test_flash_attention.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, causal, block_q, block_k, n_k):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (BQ, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (BK, hd)
+    s = jnp.dot(q, k.T) * scale                          # (BQ, BK) fp32
+
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v_ref[0, 0].astype(jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None,
+                    block_q=DEFAULT_BQ, block_k=DEFAULT_BK, interpret=True):
+    """q: (B, H, S, hd); k, v: (B, Hkv, S, hd) with H % Hkv == 0.
+
+    Returns (B, H, S, hd).  HBM traffic: one read of q/k/v + one write of o.
+    """
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    n_q = S // block_q
+    n_k = S // block_k
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    kern = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                             block_q=block_q, block_k=block_k, n_k=n_k)
+    grid = (B, H, n_q, n_k)
+    q_spec = pl.BlockSpec((1, 1, block_q, hd),
+                          lambda b, h, i, j: (b, h, i, 0))
+    kv_spec = pl.BlockSpec((1, 1, block_k, hd),
+                           lambda b, h, i, j: (b, h // G, j, 0))
+    o_spec = pl.BlockSpec((1, 1, block_q, hd),
+                          lambda b, h, i, j: (b, h, i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum
+            pltpu.VMEM((block_q, hd), jnp.float32),  # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def attention_hbm_bytes_flash(B, H, Hkv, S, hd, bytes_per_el=2) -> int:
+    """Analytic HBM traffic of the fused kernel (the roofline overlay)."""
+    q = B * H * S * hd
+    kv = 2 * B * Hkv * S * hd
+    o = B * H * S * hd
+    return (q + kv + o) * bytes_per_el
+
+
+def attention_hbm_bytes_unfused(B, H, S, hd, block_k, passes=5,
+                                bytes_per_el=4) -> int:
+    """Approximate traffic of the XLA chunked path: every (S, block_k)
+    score tile crosses HBM ~``passes`` times (write + softmax read/write +
+    AV read), fp32."""
+    tiles = S // block_k
+    return B * H * S * block_k * tiles * passes * bytes_per_el

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose-tested per shape/dtype).
+
+These spell out Algorithm 3 lines 6, 12, 13 (fused apply) and line 9
+(hessian EMA) exactly — the kernels must match bit-for-tolerance — plus
+the plain-softmax oracle for the flash-attention kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sophia_fused_ref(p, m, h, g, *, lr, beta1, gamma, eps, weight_decay,
+                     clip_threshold=1.0):
+    """One fused Sophia step on a single tensor.
+
+    Returns (new_p, new_m, n_clipped):
+        m'  = beta1 m + (1-beta1) g
+        u   = clip(m' / max(gamma h, eps), +-rho)
+        p'  = p - lr wd p - lr u
+    """
+    f32 = jnp.float32
+    m_new = beta1 * m.astype(f32) + (1.0 - beta1) * g.astype(f32)
+    raw = m_new / jnp.maximum(gamma * h.astype(f32), eps)
+    u = jnp.clip(raw, -clip_threshold, clip_threshold)
+    p_new = p.astype(f32) * (1.0 - lr * weight_decay) - lr * u
+    n_clipped = jnp.sum(jnp.abs(raw) >= clip_threshold).astype(jnp.int32)
+    return p_new.astype(p.dtype), m_new.astype(m.dtype), n_clipped
+
+
+def hessian_ema_ref(h, hhat, *, beta2):
+    """h' = beta2 h + (1-beta2) hhat  (Algorithm 3 line 9)."""
+    f32 = jnp.float32
+    out = beta2 * h.astype(f32) + (1.0 - beta2) * hhat.astype(f32)
+    return out.astype(h.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None):
+    """Plain softmax attention oracle for the flash kernel.
+
+    q: (B, H, S, hd); k, v: (B, Hkv, S, hd) GQA."""
+    import math
+
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kx = jnp.repeat(k, G, axis=1)
+    vx = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      vx.astype(jnp.float32)).astype(q.dtype)
+
+
+def adamw_fused_ref(p, m, v, g, *, lr, beta1, beta2, eps, weight_decay,
+                    step):
+    """Fused AdamW step (baseline gets the same kernel treatment so the
+    wall-clock overhead comparison in Table 1 stays apples-to-apples)."""
+    f32 = jnp.float32
+    m_new = beta1 * m.astype(f32) + (1.0 - beta1) * g.astype(f32)
+    v_new = beta2 * v.astype(f32) + (1.0 - beta2) * jnp.square(g.astype(f32))
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    u = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    p_new = p.astype(f32) * (1.0 - lr * weight_decay) - lr * u
+    return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)

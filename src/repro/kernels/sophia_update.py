@@ -1,0 +1,117 @@
+"""Fused Sophia-step Pallas TPU kernels.
+
+Why a kernel: the optimizer update is element-wise over every parameter —
+pure HBM-bandwidth work.  Unfused, XLA materializes m', raw-update, clipped
+update, decayed params as separate buffers: ~6 reads + ~4 writes per element.
+The fused kernel reads (p, m, h, g) once and writes (p', m') once — the
+bandwidth floor — and streams VMEM blocks of 128k elements (512 KiB fp32
+per operand; 4 in + 2 out = 3 MiB live, well under the ~16 MiB v5e VMEM
+budget).  Blocks are 1-D and lane-aligned (128k = 1024 x 128).
+
+Validated under ``interpret=True`` on CPU against kernels/ref.py across a
+shape x dtype sweep (tests/test_kernels.py); on a real TPU the same
+pallas_call compiles natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 128 * 1024  # elements per VMEM block (fp32: 512 KiB per operand)
+
+
+def _sophia_kernel(lr_ref, p_ref, m_ref, h_ref, g_ref,
+                   p_out, m_out, nclip_out, *,
+                   beta1, gamma, eps, weight_decay, clip_threshold):
+    lr = lr_ref[0]
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g_ref[...]
+    raw = m / jnp.maximum(gamma * h_ref[...], eps)
+    u = jnp.clip(raw, -clip_threshold, clip_threshold)
+    p_out[...] = p_ref[...] * (1.0 - lr * weight_decay) - lr * u
+    m_out[...] = m
+    nclip_out[0] = jnp.sum((jnp.abs(raw) >= clip_threshold)
+                           .astype(jnp.int32))
+
+
+def sophia_fused_block(p, m, h, g, lr, *, beta1, gamma, eps, weight_decay,
+                       clip_threshold=1.0, block=BLOCK, interpret=True):
+    """Run the fused step on a flat fp32 array (length % block == 0)."""
+    n = p.shape[0]
+    grid = n // block
+    kern = functools.partial(
+        _sophia_kernel, beta1=beta1, gamma=gamma, eps=eps,
+        weight_decay=weight_decay, clip_threshold=clip_threshold)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    lr_spec = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[lr_spec, spec, spec, spec, spec],
+        out_specs=[spec, spec, pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32),
+                   jax.ShapeDtypeStruct((n,), jnp.float32),
+                   jax.ShapeDtypeStruct((grid,), jnp.int32)],
+        interpret=interpret,
+    )(lr.reshape(1).astype(jnp.float32), p, m, h, g)
+
+
+def _hess_ema_kernel(h_ref, e_ref, h_out, *, beta2, scale):
+    h_out[...] = beta2 * h_ref[...] + (1.0 - beta2) * scale * e_ref[...]
+
+
+def hessian_ema_block(h, est, *, beta2, scale=1.0, block=BLOCK,
+                      interpret=True):
+    """h' = beta2 h + (1-beta2) * scale * est on a flat fp32 array.
+
+    ``scale`` folds the GNB batch factor B in (Algorithm 2 line 6) so the
+    squared-gradient estimate never materializes separately.
+    """
+    n = h.shape[0]
+    grid = n // block
+    kern = functools.partial(_hess_ema_kernel, beta2=beta2, scale=scale)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(h, est)
+
+
+def _adamw_kernel(sc_ref, p_ref, m_ref, v_ref, g_ref, p_out, m_out, v_out, *,
+                  beta1, beta2, eps, weight_decay):
+    lr, bc1, bc2 = sc_ref[0], sc_ref[1], sc_ref[2]
+    g = g_ref[...]
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+    p_out[...] = p_ref[...] * (1.0 - lr * weight_decay) - lr * u
+    m_out[...] = m
+    v_out[...] = v
+
+
+def adamw_fused_block(p, m, v, g, lr, step, *, beta1, beta2, eps,
+                      weight_decay, block=BLOCK, interpret=True):
+    """Fused AdamW on a flat fp32 array (baseline parity for Table 1)."""
+    n = p.shape[0]
+    grid = n // block
+    bc1 = 1.0 - beta1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - beta2 ** step.astype(jnp.float32)
+    scalars = jnp.stack([lr.astype(jnp.float32), bc1, bc2])
+    kern = functools.partial(_adamw_kernel, beta1=beta1, beta2=beta2,
+                             eps=eps, weight_decay=weight_decay)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    sc_spec = pl.BlockSpec((3,), lambda i: (0,))
+    return pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[sc_spec, spec, spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 3,
+        interpret=interpret,
+    )(scalars, p, m, v, g)

@@ -1,0 +1,294 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+    * build ShapeDtypeStruct stand-ins for every input (zero allocation),
+    * jit the step with explicit in/out shardings from the rule table,
+    * .lower().compile() against the production mesh,
+    * record memory_analysis (fits-per-device proof), cost_analysis
+      (FLOPs / bytes), and collective bytes parsed from the compiled HLO.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import ARCHS, ASSIGNED, get_config, input_specs
+from ..configs.shapes import SHAPES, applicable
+from ..core.baselines import AdamWState
+from ..core.clipping import ClipState
+from ..core.sophia import SophiaState
+from ..distributed.sharding import (batch_specs, cache_specs,
+                                    partition_params, set_activation_mesh,
+                                    to_shardings)
+from ..models import get_model
+from ..train.train_state import TrainState
+from ..train.trainer import TrainerConfig, make_train_fns
+from .hlo_analysis import analyze_hlo
+from .mesh import make_production_mesh
+from .roofline import (dominant_term, model_flops_infer, model_flops_train,
+                       roofline_terms)
+
+
+def state_partition_specs(state_shape: TrainState, pspecs) -> TrainState:
+    """PartitionSpecs for a TrainState: optimizer m/h/v mirror params."""
+    scalar = P()
+    opt = state_shape.opt_state
+    if isinstance(opt, SophiaState):
+        opt_specs = SophiaState(count=scalar, m=pspecs, h=pspecs,
+                                hess_count=scalar, clip_fraction=scalar)
+    elif isinstance(opt, AdamWState):
+        opt_specs = AdamWState(count=scalar, m=pspecs, v=pspecs)
+    else:  # generic: any params-shaped subtree mirrors pspecs
+        opt_specs = jax.tree.map(lambda _: scalar, opt)
+    return TrainState(step=scalar, params=pspecs, opt_state=opt_specs,
+                      clip_state=jax.tree.map(lambda _: scalar,
+                                              state_shape.clip_state),
+                      rng=scalar)
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _bf16_params(shape_tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if s.dtype == jnp.float32 else s, shape_tree)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, opt: str = "sophia_g",
+               fsdp: bool = True, remat: str = "full",
+               attn_impl: str = "auto", donate: bool = True,
+               grad_accum: int = 1, state_dtype: str = "float32",
+               moe_impl: str = "gspmd", seq_shard: bool = False):
+    """Returns (lowered, meta) for one (arch, shape) cell on ``mesh``."""
+    cfg = get_config(arch)
+    cell = input_specs(cfg, shape_name)
+    assert cell is not None
+    model = get_model(cfg)
+    set_activation_mesh(mesh)  # pin residual/logits/expert shardings
+    from ..distributed.sharding import set_sequence_sharding
+    from ..models.moe import set_moe_impl
+    set_moe_impl(moe_impl)
+    set_sequence_sharding(seq_shard)
+
+    if cell.kind == "train":
+        tc = TrainerConfig(optimizer=opt, remat=remat, attn_impl=attn_impl,
+                           total_steps=100_000, grad_accum=grad_accum,
+                           state_dtype=state_dtype)
+        init_fn, train_step, _hess = make_train_fns(cfg, tc)
+        state_shape = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+        pspecs = partition_params(state_shape.params, mesh, fsdp=fsdp)
+        sspecs = state_partition_specs(state_shape, pspecs)
+        bspecs = batch_specs(cell.specs["batch"], mesh)
+        jf = jax.jit(train_step,
+                     in_shardings=(_ns(mesh, sspecs), _ns(mesh, bspecs)),
+                     out_shardings=(_ns(mesh, sspecs), None),
+                     donate_argnums=(0,) if donate else ())
+        lowered = jf.lower(state_shape, cell.specs["batch"])
+        return lowered, {"cfg": cfg, "kind": "train"}
+
+    # serving cells use bf16 weights.  TP-only sharding (weights replicated
+    # across the data axis — the low-latency layout) when they fit; models
+    # too big for that (400B MoE) shard weights over the data axis too and
+    # gather per layer (throughput serving layout).
+    params_shape = _bf16_params(
+        jax.eval_shape(lambda k: model.init_params(cfg, k),
+                       jax.random.PRNGKey(0)))
+    tp_resident_gb = cfg.param_count() * 2 / mesh.shape["model"] / 1e9
+    serve_fsdp = tp_resident_gb > 10.0
+    pspecs = partition_params(params_shape, mesh, fsdp=serve_fsdp)
+
+    if cell.kind == "prefill":
+        if cfg.family == "encdec":
+            def step(params, frames, cache):
+                from ..models import encdec
+                return encdec.prefill_encoder(cfg, params, frames, cache)
+            cspecs = cache_specs(cell.specs["cache"], mesh)
+            fspecs = batch_specs({"f": cell.specs["frames"]}, mesh)["f"]
+            jf = jax.jit(step, in_shardings=(
+                _ns(mesh, pspecs), _ns(mesh, fspecs), _ns(mesh, cspecs)))
+            lowered = jf.lower(params_shape, cell.specs["frames"],
+                               cell.specs["cache"])
+        elif cfg.family in ("rwkv", "griffin"):
+            def step(params, tokens):
+                out = model.forward(cfg, params, tokens, last_only=True,
+                                    attn_impl=attn_impl)
+                return out[0]
+            tspecs = batch_specs({"t": cell.specs["tokens"]}, mesh)["t"]
+            jf = jax.jit(step, in_shardings=(_ns(mesh, pspecs),
+                                             _ns(mesh, tspecs)))
+            lowered = jf.lower(params_shape, cell.specs["tokens"])
+        else:
+            def step(params, tokens, patch_embeds=None):
+                kw = {"attn_impl": attn_impl}
+                if patch_embeds is not None:
+                    kw["patch_embeds"] = patch_embeds
+                return model.prefill(cfg, params, tokens, **kw)
+            tspecs = batch_specs({"t": cell.specs["tokens"]}, mesh)["t"]
+            args = [params_shape, cell.specs["tokens"]]
+            in_sh = [_ns(mesh, pspecs), _ns(mesh, tspecs)]
+            if "patch_embeds" in cell.specs:
+                args.append(cell.specs["patch_embeds"])
+                in_sh.append(_ns(
+                    mesh, batch_specs({"p": cell.specs["patch_embeds"]},
+                                      mesh)["p"]))
+            jf = jax.jit(step, in_shardings=tuple(in_sh))
+            lowered = jf.lower(*args)
+        return lowered, {"cfg": cfg, "kind": "prefill"}
+
+    # decode
+    cspecs = cache_specs(cell.specs["cache"], mesh)
+    tspecs = batch_specs({"t": cell.specs["tokens"]}, mesh)["t"]
+    position = jnp.int32(cell.specs["position"])
+
+    def step(params, cache, tokens):
+        if cfg.family == "rwkv":
+            logits, new_cache = model.decode_step(cfg, params, cache, tokens)
+        else:
+            logits, new_cache = model.decode_step(cfg, params, cache, tokens,
+                                                  position)
+        return jnp.argmax(logits[:, -1], -1), new_cache
+
+    jf = jax.jit(step,
+                 in_shardings=(_ns(mesh, pspecs), _ns(mesh, cspecs),
+                               _ns(mesh, tspecs)),
+                 out_shardings=(None, _ns(mesh, cspecs)),
+                 donate_argnums=(1,) if donate else ())
+    lowered = jf.lower(params_shape, cell.specs["cache"],
+                       cell.specs["tokens"])
+    return lowered, {"cfg": cfg, "kind": "decode"}
+
+
+def analyse(lowered, meta, mesh, shape_name: str) -> dict:
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # NOTE: XLA's compiled.cost_analysis() counts while-loop bodies once
+    # (scan-over-layers => ~n_layers undercount); analyze_hlo walks the
+    # call graph and multiplies loop bodies by parsed trip counts.
+    acc = analyze_hlo(hlo)
+    cost = {"flops": acc["flops"], "bytes accessed": acc["bytes"]}
+    coll = dict(acc["coll"])
+    coll["total"] = acc["coll_total"]
+    terms = roofline_terms(cost, coll["total"])
+    cfg = meta["cfg"]
+    sh = SHAPES[shape_name]
+    chips = mesh.devices.size
+    if meta["kind"] == "train":
+        tokens = sh["batch"] * sh["seq"]
+        mflops = model_flops_train(cfg.active_param_count(), tokens) / chips
+    elif meta["kind"] == "prefill":
+        tokens = sh["batch"] * sh["seq"]
+        mflops = model_flops_infer(cfg.active_param_count(), tokens) / chips
+    else:
+        tokens = sh["batch"]  # one token per sequence
+        mflops = model_flops_infer(cfg.active_param_count(), tokens) / chips
+    useful = mflops / terms["flops_per_device"] if terms["flops_per_device"] else 0.0
+    dom = dominant_term(terms)
+    t_total = max(terms["t_compute_s"], terms["t_memory_s"],
+                  terms["t_collective_s"])
+    return {
+        "arch": cfg.name,
+        "shape": shape_name,
+        "kind": meta["kind"],
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": int(chips),
+        "compile_s": round(compile_s, 1),
+        "flops_per_device": terms["flops_per_device"],
+        "bytes_per_device": terms["bytes_per_device"],
+        "collective_bytes_per_device": terms["collective_bytes_per_device"],
+        "coll_breakdown": {k: v for k, v in coll.items()
+                           if k != "total" and v},
+        "t_compute_s": terms["t_compute_s"],
+        "t_memory_s": terms["t_memory_s"],
+        "t_collective_s": terms["t_collective_s"],
+        "dominant": dom,
+        "model_flops_per_device": mflops,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": (terms["t_compute_s"] / t_total * useful
+                              if t_total else 0.0),
+        "mem_args_gb": mem.argument_size_in_bytes / 1e9,
+        "mem_out_gb": mem.output_size_in_bytes / 1e9,
+        "mem_temp_gb": mem.temp_size_in_bytes / 1e9,
+        "mem_alias_gb": mem.alias_size_in_bytes / 1e9,
+        "mem_peak_gb": (mem.argument_size_in_bytes
+                        + mem.output_size_in_bytes
+                        + mem.temp_size_in_bytes
+                        - mem.alias_size_in_bytes) / 1e9,
+    }
+
+
+def run_cell(arch, shape_name, *, multi_pod=False, opt="sophia_g",
+             fsdp=True, remat="full", attn_impl="auto"):
+    cfg = get_config(arch)
+    ok, reason = applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    lowered, meta = lower_cell(arch, shape_name, mesh, opt=opt, fsdp=fsdp,
+                               remat=remat, attn_impl=attn_impl)
+    rec = analyse(lowered, meta, mesh, shape_name)
+    rec.update({"opt": opt, "fsdp": fsdp, "remat": remat})
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCHS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--opt", default="sophia_g")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in cells:
+        print(f"=== {arch} x {shape} "
+              f"({'multi' if args.multi_pod else 'single'}-pod) ===",
+              flush=True)
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           opt=args.opt, fsdp=not args.no_fsdp,
+                           remat=args.remat)
+        except Exception as e:  # record the failure, keep going
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "error": repr(e)[:500]}
+        results.append(rec)
+        print(json.dumps(rec, indent=1, default=float), flush=True)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1, default=float)
+    return results
+
+
+if __name__ == "__main__":
+    main()

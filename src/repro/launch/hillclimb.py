@@ -1,0 +1,135 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""§Perf hillclimbing: hypothesis -> change -> re-lower -> measure.
+
+Three cells (selection rationale in EXPERIMENTS.md §Perf):
+  1. deepseek-moe-16b x train_4k   — most collective-bound
+  2. qwen1.5-110b    x train_4k   — paper-technique flagship (Sophia train)
+  3. yi-6b           x prefill_32k — worst serving roofline fraction
+
+Each variant is a named configuration of the levers the framework exposes
+(moe dispatch impl, sequence sharding, grad accum, attention impl, remat,
+state dtype).  Results stream to results/hillclimb.json.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell deepseek
+"""
+import argparse
+import json
+import time
+import traceback
+
+from .dryrun import analyse, lower_cell
+from .mesh import make_production_mesh
+
+CELLS = {
+    "deepseek": ("deepseek-moe-16b", "train_4k", [
+        # (variant name, hypothesis, kwargs)
+        ("baseline", "gspmd scatter dispatch: compiler all-gathers the "
+         "(T*K, D) dispatch tensors ~ 2x25.8GB/dev/layer", dict(grad_accum=4)),
+        ("a2a", "explicit shard_map all-to-all moves only routed tokens: "
+         "collective ~ T_loc*K*cf*D/M per dev per direction -> expect "
+         ">10x lower collective term", dict(grad_accum=4, moe_impl="a2a")),
+        ("a2a+seqshard", "sequence-sharded residuals halve the TP "
+         "all-reduce volume on top of a2a", dict(grad_accum=4,
+                                                 moe_impl="a2a",
+                                                 seq_shard=True)),
+    ]),
+    "qwen110b": ("qwen1.5-110b", "train_4k", [
+        ("baseline", "FSDP+TP, full remat, accum 16", dict(grad_accum=16)),
+        ("seqshard", "sequence-parallel residual: remat carries shrink "
+         "16x; post-block all-reduce -> reduce-scatter (half volume)",
+         dict(grad_accum=16, seq_shard=True)),
+        ("seqshard+chunked", "chunked attention on top: no (S,S) score "
+         "buffer in HBM", dict(grad_accum=16, seq_shard=True,
+                               attn_impl="chunked")),
+        ("seqshard+accum8", "fewer, larger microbatches raise arithmetic "
+         "intensity per pass (fewer weight re-reads across microbatches)",
+         dict(grad_accum=8, seq_shard=True)),
+    ]),
+    "yi_prefill": ("yi-6b", "prefill_32k", [
+        ("baseline", "chunked attention, bf16 weights, TP-only", dict()),
+        ("seqshard", "sequence-sharded residuals: activations 1/16 per "
+         "device through MLP; attention gathers KV once per layer",
+         dict(seq_shard=True)),
+    ]),
+    # round 2 — informed by round-1 measurements (see EXPERIMENTS.md §Perf)
+    "llama4": ("llama4-maverick-400b-a17b", "train_4k", [
+        ("a2a", "generality of hillclimb 1: the same shard_map all-to-all "
+         "dispatch on the 128-expert top-1 interleaved MoE (collective-"
+         "bound at baseline, tcoll 51.4s)", dict(grad_accum=16,
+                                                 moe_impl="a2a")),
+    ]),
+    "llama4_pf": ("llama4-maverick-400b-a17b", "prefill_32k", [
+        ("a2a", "prefill is also collective-bound (49.4s): a2a dispatch on "
+         "the serving path", dict(moe_impl="a2a")),
+    ]),
+    "deepseek3": ("deepseek-moe-16b", "train_4k", [
+        ("a2a+accum8", "a2a left memory 18.5GB (>HBM): smaller microbatches "
+         "shrink dispatch/activation working set under the 16GB budget "
+         "without touching the collective win", dict(grad_accum=8,
+                                                     moe_impl="a2a")),
+    ]),
+    "deepseek2": ("deepseek-moe-16b", "train_4k", [
+        ("a2a+accum2", "round 1 left a2a memory-bound; halving microbatch "
+         "count halves per-step FSDP weight regathers and per-pass fixed "
+         "traffic", dict(grad_accum=2, moe_impl="a2a")),
+        ("a2a+accum1", "single pass: minimum weight traffic, memory "
+         "permitting", dict(grad_accum=1, moe_impl="a2a")),
+    ]),
+    "qwen110b3": ("qwen1.5-110b", "train_4k", [
+        ("accum16+remat2x8fix", "nested remat with the inner body ALSO "
+         "checkpointed: long-lived carries 80->10 layers; transient during "
+         "group backward = g layer inputs, not g layers' intermediates",
+         dict(grad_accum=16, remat="scan2")),
+    ]),
+    "qwen110b2": ("qwen1.5-110b", "train_4k", [
+        ("accum8", "round 1 showed FSDP regathers scale with microbatch "
+         "count (accum8+seqshard halved tcoll): accum 8 WITHOUT seqshard "
+         "should cut baseline tcoll ~2x", dict(grad_accum=8)),
+        ("accum8+remat2x8", "nested-scan remat keeps only every-8th-layer "
+         "carry: memory freed by smaller carries pays for accum 8",
+         dict(grad_accum=8, remat="scan2")),
+        ("accum4+remat2x8", "push further: 4 microbatches = 4x fewer "
+         "weight regathers vs baseline", dict(grad_accum=4, remat="scan2")),
+    ]),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(CELLS), required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/hillclimb.json")
+    args = ap.parse_args()
+
+    arch, shape, variants = CELLS[args.cell]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    for name, hypothesis, kw in variants:
+        t0 = time.time()
+        try:
+            lowered, meta = lower_cell(arch, shape, mesh, **kw)
+            rec = analyse(lowered, meta, mesh, shape)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"error": repr(e)[:400]}
+        rec.update({"cell": args.cell, "variant": name,
+                    "hypothesis": hypothesis, "kwargs": {k: str(v) for k, v
+                                                         in kw.items()},
+                    "wall_s": round(time.time() - t0, 1)})
+        results.append(rec)
+        if "error" not in rec:
+            print(f"[{args.cell}/{name}] tc={rec['t_compute_s']:.3f} "
+                  f"tm={rec['t_memory_s']:.3f} "
+                  f"tcoll={rec['t_collective_s']:.3f} dom={rec['dominant']} "
+                  f"mem={rec['mem_peak_gb']:.1f}GB "
+                  f"useful={rec['useful_flops_ratio']:.2f}", flush=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before the
+first jax device query.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod 16x16 = 256 chips (data, model); multi-pod adds a leading
+    pod axis: 2 x 16 x 16 = 512 chips (pod, data, model).
+
+    Scaling pods is a shape change only: every PartitionSpec in the tree
+    uses the composite ("pod", "data") axis, so (8, 16, 16) = 2048 chips
+    works unchanged.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Generic helper for tests/examples (e.g. (2, 2) on 4 host devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))

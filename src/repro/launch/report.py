@@ -1,0 +1,75 @@
+"""Generate the EXPERIMENTS.md roofline/dry-run tables from results JSONs."""
+import json
+import os
+import sys
+
+
+def load(path):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_cell(r):
+    if r.get("skipped"):
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — | "
+                f"SKIP: {r['skipped'][:58]} |")
+    if r.get("error"):
+        return f"| {r['arch']} | {r['shape']} | ERROR {r['error'][:60]} |"
+    t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+    frac = r["t_compute_s"] / t * r.get("useful_flops_ratio", 0) if t else 0
+    return ("| {arch} | {shape} | {tc:.3f} | {tm:.3f} | {tcoll:.3f} | "
+            "{dom} | {useful:.2f} | {frac:.4f} | {mem:.1f} | {note} |").format(
+        arch=r["arch"], shape=r["shape"], tc=r["t_compute_s"],
+        tm=r["t_memory_s"], tcoll=r["t_collective_s"], dom=r["dominant"],
+        useful=r.get("useful_flops_ratio", 0), frac=frac,
+        mem=r["mem_peak_gb"],
+        note=f"accum={r.get('grad_accum', 1)}"
+             + (",bf16-states" if r.get("state_dtype") == "bfloat16" else ""))
+
+
+HDR = ("| arch | shape | T_compute (s) | T_memory (s) | T_collective (s) | "
+       "dominant | useful (6ND/HLO) | roofline frac | mem/dev (GB) | notes |\n"
+       "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def table(rows):
+    return "\n".join([HDR] + [fmt_cell(r) for r in rows])
+
+
+def hillclimb_table(rows):
+    out = ["| cell | variant | T_compute | T_memory | T_collective | "
+           "dominant | mem GB | hypothesis |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("error"):
+            out.append(f"| {r['cell']} | {r['variant']} | ERROR: "
+                       f"{r['error'][:60]} |")
+            continue
+        out.append(
+            f"| {r['cell']} | {r['variant']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['dominant']} | {r['mem_peak_gb']:.1f} | "
+            f"{r['hypothesis'][:90]} |")
+    return "\n".join(out)
+
+
+def main():
+    base = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "results")
+    base = os.path.abspath("results")
+    single = load(os.path.join(base, "dryrun_single.json"))
+    multi = load(os.path.join(base, "dryrun_multi.json"))
+    hc = load(os.path.join(base, "hillclimb.json"))
+    print("## Single-pod (16x16 = 256 chips)\n")
+    print(table(single))
+    print("\n## Multi-pod (2x16x16 = 512 chips)\n")
+    print(table(multi))
+    if hc:
+        print("\n## Hillclimb variants\n")
+        print(hillclimb_table(hc))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs          (197 TF/s bf16)
+    memory     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+    collective = collective_bytes_per_device / link_bw      (~50 GB/s ICI)
+
+``cost_analysis`` reports per-device (post-SPMD) flops and bytes.
+Collective bytes are NOT in cost_analysis: we parse the compiled HLO text,
+build a symbol table of instruction result sizes, and sum the *operand*
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (counting async ``-start`` once, skipping ``-done``).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12     # bf16
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*([\w\-]+)\(")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of 'f32[16,32]{1,0}' or tuple '(f32[8], bf16[4,4])'."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from compiled HLO text."""
+    sizes: Dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if m:
+            name, type_str, _op = m.groups()
+            sizes[name] = _shape_bytes(type_str)
+
+    out = {k: 0 for k in _COLLECTIVES}
+    out["total"] = 0
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        kind = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # async completion: counted at -start
+        # operand list: everything inside the first (...) after the opcode
+        paren = line[line.index(op) + len(op):]
+        depth = 0
+        args = ""
+        for ch in paren:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                args += ch
+        operand_names = re.findall(r"%([\w.\-]+)", args)
+        b = sum(sizes.get(n, 0) for n in operand_names)
+        if b == 0:
+            b = _shape_bytes(type_str)  # fallback: result size
+        out[kind] += b
+        out["total"] += b
+    return out
+
+
+def roofline_terms(cost: dict, coll_bytes: int) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "collective_bytes_per_device": float(coll_bytes),
+        "t_compute_s": flops / PEAK_FLOPS,
+        "t_memory_s": byts / HBM_BW,
+        "t_collective_s": coll_bytes / ICI_BW,
+    }
+
+
+def dominant_term(terms: dict) -> str:
+    t = {"compute": terms["t_compute_s"], "memory": terms["t_memory_s"],
+         "collective": terms["t_collective_s"]}
+    return max(t, key=t.get)
+
+
+def model_flops_train(n_params_active: int, tokens: int) -> float:
+    """6*N*D per step (fwd+bwd)."""
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_infer(n_params_active: int, tokens: int) -> float:
+    """2*N*D (forward only)."""
+    return 2.0 * n_params_active * tokens

@@ -1,0 +1,48 @@
+"""Serving driver: batched prefill + decode for any registered arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
+        --batch 4 --prompt-len 32 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, get_config
+from ..models import get_model
+from ..serve import generate
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b", choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(args.seed))
+    prompt = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
+                                (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    t0 = time.time()
+    out = generate(cfg, params, prompt, max_new=args.max_new,
+                   temperature=args.temperature, seed=args.seed)
+    dt = time.time() - t0
+    toks = args.batch * args.max_new
+    print(f"arch={cfg.name} generated {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s incl. compile)")
+    print("sample:", out[0, :16].tolist())
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Baseline dry-run sweep over every (arch x shape) cell.
+
+Train cells pick a per-arch gradient-accumulation factor and adaptively
+double it until the per-device memory fits the 16 GB v5e HBM (production
+microbatching).  Results stream to JSON so a crash never loses progress.
+
+    PYTHONPATH=src python -m repro.launch.sweep --out results/dryrun_single.json
+    PYTHONPATH=src python -m repro.launch.sweep --multi-pod --out results/dryrun_multi.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+from ..configs import ASSIGNED, get_config
+from ..configs.shapes import SHAPES, applicable
+from .dryrun import analyse, lower_cell
+from .mesh import make_production_mesh
+
+HBM_BUDGET_GB = 15.5
+
+# starting grad-accum for train cells (scaled by layer count x width)
+ACCUM0 = {
+    "qwen1.5-110b": 16,
+    "llama4-maverick-400b-a17b": 32,
+    "gemma2-9b": 8,
+    "yi-6b": 8,
+    "qwen2-vl-7b": 8,
+}
+
+
+def run_one(arch, shape, mesh, multi_pod):
+    cfg = get_config(arch)
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "skipped": reason}
+    kind = SHAPES[shape]["kind"]
+    # microbatches must stay divisible by the dp degree — a microbatch
+    # smaller than the data axis replicates compute (silent n-fold waste)
+    import numpy as _np
+    from ..distributed.sharding import batch_axis
+    b_ax = batch_axis(mesh)
+    dp = (int(_np.prod([mesh.shape[a] for a in b_ax]))
+          if isinstance(b_ax, tuple) else mesh.shape[b_ax])
+    max_accum = max(1, SHAPES[shape]["batch"] // dp)
+    accum = min(ACCUM0.get(arch, 4), max_accum) if kind == "train" else 1
+    # 400B-class: fp32 m/h alone exceed a pod's HBM; bf16 Sophia states
+    # (same trick Gopher et al. used for Adam states) are the config here
+    sdt = ("bfloat16" if cfg.param_count() > 2e11 and kind == "train"
+           else "float32")
+    last = None
+    while True:
+        lowered, meta = lower_cell(arch, shape, mesh, grad_accum=accum,
+                                   state_dtype=sdt)
+        rec = analyse(lowered, meta, mesh, shape)
+        rec.update({"grad_accum": accum, "multi_pod": multi_pod,
+                    "state_dtype": sdt})
+        last = rec
+        if kind != "train" or rec["mem_peak_gb"] <= HBM_BUDGET_GB \
+                or accum >= max_accum:
+            break
+        accum = min(accum * 2, max_accum)
+    last["fits_hbm"] = last["mem_peak_gb"] <= 16.0
+    return last
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--archs", nargs="*", default=None)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    results = []
+    archs = args.archs or ASSIGNED
+    for arch in archs:
+        for shape in SHAPES:
+            t0 = time.time()
+            tag = f"{arch} x {shape} ({'multi' if args.multi_pod else 'single'})"
+            try:
+                rec = run_one(arch, shape, mesh, args.multi_pod)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape, "error": repr(e)[:400]}
+            rec["wall_s"] = round(time.time() - t0, 1)
+            results.append(rec)
+            status = ("SKIP" if rec.get("skipped")
+                      else "ERR" if rec.get("error")
+                      else f"mem={rec['mem_peak_gb']:.1f}GB dom={rec['dominant']}")
+            print(f"[{rec['wall_s']:7.1f}s] {tag}: {status}", flush=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Production training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gpt2-small \
+        --opt sophia_g --steps 400 --global-batch 32 --seq-len 256 \
+        --ckpt-dir /tmp/run1
+
+Features: any registered arch (--smoke for the reduced config), any
+optimizer, sharded execution over all visible devices (mesh auto-shaped),
+Algorithm-3 hessian cadence, gradient accumulation, async checkpointing
+with auto-resume, preemption-safe exit, straggler telemetry.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import ARCHS, get_config
+from ..data import DataConfig, make_source
+from ..distributed.sharding import (batch_specs, partition_params,
+                                    set_activation_mesh)
+from ..train import TrainerConfig, checkpoint as ckpt, make_train_fns
+from ..train.elastic import PreemptionGuard, StragglerDetector
+from .mesh import make_mesh
+
+
+def build_mesh():
+    n = len(jax.devices())
+    if n == 1:
+        return None
+    # widest data axis that divides, model gets the rest
+    model = 1
+    for m in (8, 4, 2):
+        if n % m == 0:
+            model = m
+            break
+    return make_mesh((n // model, model), ("data", "model"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-small", choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config")
+    ap.add_argument("--opt", default="sophia_g")
+    ap.add_argument("--estimator", default="gnb")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--peak-lr", type=float, default=4e-4)
+    ap.add_argument("--weight-decay", type=float, default=0.2)
+    ap.add_argument("--gamma", type=float, default=0.05)
+    ap.add_argument("--hess-interval", type=int, default=10)
+    ap.add_argument("--hess-subbatch", type=int, default=8)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--fused-kernel", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--data", default="synthetic")
+    ap.add_argument("--data-path", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tc = TrainerConfig(
+        optimizer=args.opt, estimator=args.estimator, peak_lr=args.peak_lr,
+        total_steps=args.steps, warmup_steps=max(2, args.steps // 20),
+        weight_decay=args.weight_decay, gamma=args.gamma,
+        hess_interval=args.hess_interval, hess_subbatch=args.hess_subbatch,
+        grad_accum=args.grad_accum, remat=args.remat,
+        fused_kernel=args.fused_kernel, seed=args.seed)
+    src = make_source(DataConfig(
+        seq_len=args.seq_len, global_batch=args.global_batch,
+        vocab_size=cfg.vocab_size, seed=args.seed, source=args.data,
+        path=args.data_path))
+
+    init_fn, train_step, hess_step = make_train_fns(cfg, tc)
+    mesh = build_mesh()
+    if mesh is not None:
+        set_activation_mesh(mesh)
+        state = init_fn(jax.random.PRNGKey(args.seed))
+        pspecs = partition_params(state.params, mesh, fsdp=True)
+        from .dryrun import state_partition_specs
+        sspecs = state_partition_specs(state, pspecs)
+        ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                    is_leaf=lambda x: isinstance(x, P))
+        state = jax.device_put(state, ns(sspecs))
+        sample = {k: jnp.asarray(v) for k, v in src.batch_at(0).items()}
+        bspecs = ns(batch_specs(sample, mesh))
+        train_step = jax.jit(train_step, in_shardings=(ns(sspecs), bspecs),
+                             out_shardings=(ns(sspecs), None))
+        hess_step = jax.jit(hess_step, in_shardings=(ns(sspecs), bspecs),
+                            out_shardings=(ns(sspecs), None))
+    else:
+        state = init_fn(jax.random.PRNGKey(args.seed))
+        train_step = jax.jit(train_step)
+        hess_step = jax.jit(hess_step)
+
+    start = 0
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                            state)
+        state, start = ckpt.restore(args.ckpt_dir, like)
+        print(f"[resume] restored step {start} from {args.ckpt_dir}")
+
+    guard = PreemptionGuard()
+    straggler = StragglerDetector()
+    needs_hess = args.opt in ("sophia_g", "sophia_h", "adahessian")
+    t_start = time.time()
+    for t in range(start, args.steps):
+        t0 = time.time()
+        batch = {k: jnp.asarray(v) for k, v in src.batch_at(t).items()}
+        fn = hess_step if (needs_hess and t % tc.hess_interval == 0) \
+            else train_step
+        state, metrics = fn(state, batch)
+        dt = time.time() - t0
+        if straggler.observe(dt):
+            print(f"[straggler] step {t} took {dt:.2f}s "
+                  f"(mean {straggler.mean:.2f}s)")
+        if t % args.log_every == 0:
+            loss = float(metrics["loss"])
+            print(f"step {t:6d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} {dt * 1e3:.0f}ms",
+                  flush=True)
+        if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, t + 1, state, async_=True)
+        if guard.requested:
+            print(f"[preempt] checkpointing at step {t + 1} and exiting")
+            if args.ckpt_dir:
+                ckpt.save(args.ckpt_dir, t + 1, state)
+            return state
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, state)
+        ckpt.wait_for_pending()
+    print(f"done: {args.steps - start} steps in {time.time() - t_start:.1f}s "
+          f"(straggler flags: {straggler.flagged})")
+    return state
+
+
+if __name__ == "__main__":
+    main()

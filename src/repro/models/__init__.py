@@ -1,0 +1,2 @@
+from .common import ModelConfig
+from .registry import get_model

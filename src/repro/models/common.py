@@ -1,0 +1,139 @@
+"""Model configuration shared by every architecture family."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config type covering all 10 assigned families + the paper's GPT-2.
+
+    family:
+      dense    — decoder-only transformer (GQA/MQA/MHA, RoPE or learned pos)
+      moe      — dense attention + mixture-of-experts FFN (token-choice top-k)
+      rwkv     — RWKV-6 "Finch" (attention-free, data-dependent decay)
+      griffin  — RecurrentGemma (RG-LRU recurrent blocks : local attention, 2:1)
+      encdec   — encoder-decoder (seamless-m4t backbone)
+    """
+    name: str
+    family: str                       # dense | moe | rwkv | griffin | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None    # default d_model // n_heads
+    # attention options
+    qkv_bias: bool = False            # qwen1.5
+    rope: bool = True
+    rope_theta: float = 10000.0
+    learned_pos: bool = False         # GPT-2 family
+    max_position_embeddings: int = 1 << 20
+    local_window: Optional[int] = None       # sliding-window size when local
+    local_global_pattern: Optional[str] = None  # "alternating" (gemma2)
+    attn_logit_softcap: Optional[float] = None  # gemma2: 50.0
+    final_logit_softcap: Optional[float] = None  # gemma2: 30.0
+    attn_temperature_by_layer: bool = False  # Karamcheti/Mistral trick (Fig 7b)
+    # MLP
+    activation: str = "swiglu"        # swiglu | gelu | geglu
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 1
+    moe_every: int = 1                # llama4: MoE every other layer (=2)
+    dense_d_ff: Optional[int] = None  # d_ff of interleaved dense layers
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # enc-dec
+    n_encoder_layers: int = 0
+    # VLM / multimodal
+    mrope_sections: Optional[Tuple[int, ...]] = None  # qwen2-vl M-RoPE
+    patch_embed_input: bool = False   # stub frontend injects patch embeddings
+    frame_embed_input: bool = False   # stub frontend feeds encoder directly
+    # griffin
+    rnn_width: Optional[int] = None   # RG-LRU recurrence width
+    conv_width: int = 4
+    block_pattern: Tuple[str, ...] = ()  # e.g. ("rec","rec","attn")
+    # embeddings / head
+    tie_embeddings: bool = True
+    embed_scale: bool = False         # gemma-style sqrt(d_model) scaling
+    # norms
+    norm_type: str = "rms"            # rms | ln (GPT-2)
+    post_norms: bool = False          # gemma2 sandwich norms
+    # numerics
+    dtype: str = "bfloat16"           # activation/compute dtype
+    param_dtype: str = "float32"
+    norm_eps: float = 1e-6
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a 128-lane multiple so the embedding/unembedding
+        shard cleanly over the model axis (e.g. seamless 256206 -> 256256).
+        Padding rows are never targeted by labels; standard practice."""
+        return -(-self.vocab_size // 128) * 128
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for MODEL_FLOPS = 6*N*D rooflines)."""
+        D, H, Hkv, hd, F, V, L = (self.d_model, self.n_heads, self.n_kv_heads,
+                                  self.hd, self.d_ff, self.vocab_size,
+                                  self.n_layers)
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        if self.family == "rwkv":
+            # time-mix: r,k,v,g,o (5 D*D) + decay lora + channel-mix (2 D*F)
+            per = 5 * D * D + 2 * (D * 64 + 64 * D) + 2 * D * F + 4 * D
+            return emb + L * per
+        if self.family == "griffin":
+            W = self.rnn_width or D
+            rec = 2 * D * W + W * D + 2 * W * self.conv_width + 4 * W  # in/out + gates
+            att = D * (H * hd) + 2 * D * (self.n_kv_heads * hd) + (H * hd) * D
+            mlp = 3 * D * F
+            n_attn = L // 3
+            n_rec = L - n_attn
+            return emb + n_rec * (rec + mlp) + n_attn * (att + mlp)
+        att = D * (H * hd) + 2 * D * (Hkv * hd) + (H * hd) * D
+        if self.activation in ("swiglu", "geglu"):
+            mlp = 3 * D * F
+        else:
+            mlp = 2 * D * F
+        if self.family == "moe":
+            n_moe = L // self.moe_every
+            n_dense = L - n_moe
+            dense_ff = self.dense_d_ff or F
+            mlp_dense = 3 * D * dense_ff
+            experts = (self.n_experts + self.n_shared_experts) * 3 * D * F
+            router = D * self.n_experts
+            return (emb + L * att + n_dense * mlp_dense
+                    + n_moe * (experts + router))
+        if self.family == "encdec":
+            Le = self.n_encoder_layers
+            cross = att  # decoder cross-attention
+            return emb + Le * (att + mlp) + L * (att + cross + mlp)
+        return emb + L * (att + mlp)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: 6*N_active*D rooflines)."""
+        if self.family != "moe":
+            return self.param_count()
+        D, F, L = self.d_model, self.d_ff, self.n_layers
+        hd = self.hd
+        att = D * (self.n_heads * hd) + 2 * D * (self.n_kv_heads * hd) \
+            + (self.n_heads * hd) * D
+        emb = self.vocab_size * D * (1 if self.tie_embeddings else 2)
+        n_moe = L // self.moe_every
+        n_dense = L - n_moe
+        dense_ff = self.dense_d_ff or F
+        active_mlp = (self.moe_top_k + self.n_shared_experts) * 3 * D * F
+        return (emb + L * att + n_dense * 3 * D * dense_ff
+                + n_moe * (active_mlp + D * self.n_experts))

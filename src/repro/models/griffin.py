@@ -1,0 +1,298 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU recurrent blocks
+interleaved with local (sliding-window) MQA attention at a 2:1 ratio.
+
+Block pattern: groups of (recurrent, recurrent, local-attn); 26 layers =
+8 groups + 2 tail recurrent layers.  The RG-LRU diagonal linear recurrence
+
+    a_t = exp(c * r_t * log sigmoid(Lambda))          (data-dependent decay)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+is evaluated with ``lax.associative_scan`` (TPU log-depth scan) in training
+and as an O(1) step in decode.  Bounded state (h + conv tail + 2048-window
+KV) makes this arch eligible for the long_500k serve cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .common import ModelConfig
+from .layers import (chunked_attention, cross_entropy, decode_attention,
+                     dense_init, embed, full_attention, init_attention,
+                     init_embedding, init_mlp, mlp, rms_norm, unembed)
+
+RG_LRU_C = 8.0
+
+
+def rnn_width(cfg: ModelConfig) -> int:
+    return cfg.rnn_width or cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# params
+
+
+def _init_norm(cfg):
+    return {"scale": jnp.zeros((cfg.d_model,), jnp.float32)}
+
+
+def _init_rec_block(cfg: ModelConfig, key):
+    D, W = cfg.d_model, rnn_width(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": _init_norm(cfg),
+        "w_in": dense_init(ks[0], (D, W)),
+        "w_gate": dense_init(ks[1], (D, W)),
+        "conv_k": (jax.random.normal(ks[2], (cfg.conv_width, W)) * 0.1
+                   ).astype(jnp.float32),
+        "conv_b": jnp.zeros((W,), jnp.float32),
+        "lam": jnp.linspace(2.0, 5.0, W).astype(jnp.float32),  # a in (.88,.99)
+        "w_a": dense_init(ks[3], (W, W)),
+        "b_a": jnp.zeros((W,), jnp.float32),
+        "w_x": dense_init(ks[4], (W, W)),
+        "b_x": jnp.zeros((W,), jnp.float32),
+        "w_out": dense_init(ks[5], (W, D), in_axis=0),
+        "ln_mlp": _init_norm(cfg),
+        "mlp": init_mlp(ks[6], cfg),
+    }
+
+
+def _init_attn_block(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 2)
+    return {"ln": _init_norm(cfg), "attn": init_attention(ks[0], cfg),
+            "ln_mlp": _init_norm(cfg), "mlp": init_mlp(ks[1], cfg)}
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    return cfg.n_layers // 3
+
+
+def n_tail(cfg: ModelConfig) -> int:
+    return cfg.n_layers % 3
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kemb, kgrp, ktail = jax.random.split(key, 3)
+    gkeys = jax.random.split(kgrp, n_groups(cfg))
+
+    def one_group(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"rec1": _init_rec_block(cfg, k1),
+                "rec2": _init_rec_block(cfg, k2),
+                "attn": _init_attn_block(cfg, k3)}
+
+    params = {"embed": init_embedding(kemb, cfg),
+              "groups": jax.vmap(one_group)(gkeys),
+              "final_norm": _init_norm(cfg)}
+    if n_tail(cfg):
+        tkeys = jax.random.split(ktail, n_tail(cfg))
+        params["tail"] = jax.vmap(lambda k: _init_rec_block(cfg, k))(tkeys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU + conv
+
+
+def causal_conv1d(x, kernel, bias, conv_state=None):
+    """Depthwise causal conv.  x (B,S,W), kernel (cw,W).
+
+    conv_state (B, cw-1, W): trailing inputs from the previous segment.
+    Returns (y, new_conv_state).
+    """
+    cw = kernel.shape[0]
+    B, S, W = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, cw - 1, W), x.dtype)
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, j:j + S] * kernel[j].astype(x.dtype) for j in range(cw))
+    return y + bias.astype(x.dtype), xp[:, -(cw - 1):]
+
+
+def rg_lru(u, r_gate, i_gate, lam, h0=None):
+    """u, gates: (B,S,W) fp32; returns (h (B,S,W), h_last (B,W))."""
+    log_a = RG_LRU_C * r_gate * jax.nn.log_sigmoid(lam)  # negative
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0, 1.0)) * (i_gate * u)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    # first-order linear recurrence via associative scan over time axis
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    ah, bh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return bh, bh[:, -1]
+
+
+def rec_block_apply(p, x, cfg: ModelConfig, state=None):
+    """Returns (out, new_state dict(conv, h))."""
+    dt = x.dtype
+    W = rnn_width(cfg)
+    h = rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+    gate = jax.nn.gelu(h @ p["w_gate"].astype(dt))
+    u = h @ p["w_in"].astype(dt)
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = causal_conv1d(u, p["conv_k"], p["conv_b"], conv_state)
+    u32 = u.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(u32 @ p["w_a"].astype(jnp.float32)
+                            + p["b_a"].astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(u32 @ p["w_x"].astype(jnp.float32)
+                            + p["b_x"].astype(jnp.float32))
+    h0 = state["h"] if state is not None else None
+    y, h_last = rg_lru(u32, r_gate, i_gate, p["lam"].astype(jnp.float32), h0)
+    y = (y.astype(dt) * gate) @ p["w_out"].astype(dt)
+    x = x + y
+    hm = rms_norm(x, p["ln_mlp"]["scale"], cfg.norm_eps)
+    from ..distributed.sharding import residual_axes
+    x = constrain(x + mlp(p["mlp"], hm, cfg), *residual_axes())
+    return x, {"conv": new_conv, "h": h_last}
+
+
+def attn_block_apply(p, x, cfg: ModelConfig, positions, attn_impl="auto"):
+    h = rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+    S = x.shape[1]
+    if attn_impl == "chunked" or (attn_impl == "auto" and S > 4096):
+        a = chunked_attention(p["attn"], h, cfg, positions,
+                              window=cfg.local_window)
+    else:
+        a = full_attention(p["attn"], h, cfg, positions,
+                           window=cfg.local_window)
+    x = x + a
+    hm = rms_norm(x, p["ln_mlp"]["scale"], cfg.norm_eps)
+    from ..distributed.sharding import residual_axes
+    return constrain(x + mlp(p["mlp"], hm, cfg), *residual_axes())
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+
+
+def forward(cfg: ModelConfig, params, tokens, *, attn_impl="auto",
+            remat="none", last_only=False, **_):
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, p):
+        x, _ = rec_block_apply(p["rec1"], x, cfg)
+        x, _ = rec_block_apply(p["rec2"], x, cfg)
+        x = attn_block_apply(p["attn"], x, cfg, positions, attn_impl)
+        return x, None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["groups"])
+    if n_tail(cfg):
+        def tail_body(x, p):
+            x, _ = rec_block_apply(p, x, cfg)
+            return x, None
+        x, _ = jax.lax.scan(tail_body, x, params["tail"])
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, remat="none", **_):
+    logits, aux = forward(cfg, params, batch["tokens"], remat=remat)
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce, {"ce": ce, "aux": aux}
+
+
+def logits_fn(cfg: ModelConfig, params, batch, **_):
+    return forward(cfg, params, batch["tokens"])[0]
+
+
+# ---------------------------------------------------------------------------
+# decode (bounded state: h + conv tail + rolling window KV)
+
+
+def init_state(cfg: ModelConfig, batch_size: int) -> dict:
+    W = rnn_width(cfg)
+    win = cfg.local_window
+    g = n_groups(cfg)
+    dt = cfg.compute_dtype
+
+    def rec_state(n):
+        return {"conv": jnp.zeros((n, batch_size, cfg.conv_width - 1, W), dt),
+                "h": jnp.zeros((n, batch_size, W), jnp.float32)}
+
+    state = {
+        "rec1": rec_state(g), "rec2": rec_state(g),
+        "kv": {"k": jnp.zeros((g, batch_size, win, cfg.n_kv_heads, cfg.hd), dt),
+               "v": jnp.zeros((g, batch_size, win, cfg.n_kv_heads, cfg.hd), dt)},
+    }
+    if n_tail(cfg):
+        state["tail"] = rec_state(n_tail(cfg))
+    return state
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens, position):
+    """One token with bounded state.  tokens (B,1); position scalar int32."""
+    B = tokens.shape[0]
+    x = embed(params["embed"], tokens, cfg)
+    win = cfg.local_window
+    slot = position % win
+
+    def rec_step(p, x, st):
+        return rec_block_apply(p, x, cfg, state=st)
+
+    def body(x, layer):
+        p, st_r1, st_r2, k_c, v_c = layer
+        x, n1 = rec_step(p["rec1"], x, st_r1)
+        x, n2 = rec_step(p["rec2"], x, st_r2)
+        # local attention over the rolling window
+        h = rms_norm(x, p["attn"]["ln"]["scale"], cfg.norm_eps)
+        a, k_c, v_c = _rolling_attention(p["attn"]["attn"], h, cfg, k_c, v_c,
+                                         position, slot)
+        x = x + a
+        hm = rms_norm(x, p["attn"]["ln_mlp"]["scale"], cfg.norm_eps)
+        x = x + mlp(p["attn"]["mlp"], hm, cfg)
+        return x, (n1, n2, k_c, v_c)
+
+    x, (n1, n2, nk, nv) = jax.lax.scan(
+        body, x, (params["groups"], state["rec1"], state["rec2"],
+                  state["kv"]["k"], state["kv"]["v"]))
+    new_state = {"rec1": n1, "rec2": n2, "kv": {"k": nk, "v": nv}}
+    if n_tail(cfg):
+        def tail_body(x, layer):
+            p, st = layer
+            x, ns = rec_step(p, x, st)
+            return x, ns
+        x, nt = jax.lax.scan(tail_body, x, (params["tail"], state["tail"]))
+        new_state["tail"] = nt
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return unembed(params["embed"], x, cfg), new_state
+
+
+def _rolling_attention(p, x, cfg: ModelConfig, k_cache, v_cache, position,
+                       slot):
+    """MQA decode over a rolling window cache (size = local_window)."""
+    from .layers import _qkv, apply_rope, attention_scores_block
+    dt = x.dtype
+    B = x.shape[0]
+    win = cfg.local_window
+    q, k, v = _qkv(p, x, cfg)
+    pos = jnp.full((B, 1), position, jnp.int32)
+    if cfg.rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    scale = 1.0 / math.sqrt(cfg.hd)
+    scores = attention_scores_block(q, k_cache, cfg, scale)  # (B,Hkv,G,1,win)
+    # slot s holds absolute position  pos - ((pos - s) mod win)
+    s_idx = jnp.arange(win)
+    abs_pos = position - jnp.mod(position - s_idx, win)
+    mask = abs_pos >= 0
+    scores = jnp.where(mask[None, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(dt)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v_cache)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+    return out @ p["wo"].astype(dt), k_cache, v_cache

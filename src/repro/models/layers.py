@@ -1,0 +1,347 @@
+"""Shared neural-network layers (pure JAX, param pytrees, init + apply).
+
+Conventions:
+  * params are nested dicts of jnp arrays; layer-stacked params carry a
+    leading ``n_layers`` axis and are consumed by ``lax.scan``.
+  * activations run in ``cfg.compute_dtype`` (bf16); norms/softmax/router in
+    fp32; params stored in ``cfg.param_dtype`` (fp32).
+  * every init function takes an explicit PRNG key (splittable, deterministic).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .common import ModelConfig
+
+# ---------------------------------------------------------------------------
+# initializers
+
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    """LeCun-normal (fan-in) initialization, the TPU LM default."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    return (jax.random.normal(key, shape) / math.sqrt(fan_in)).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (standard + multimodal M-RoPE)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0,
+               mrope_sections=None):
+    """x: (B, S, H, hd); positions: (B, S) or (B, 3, S) for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the rotary half-dim is split into sections, each
+    rotated by its own position stream (temporal / height / width).
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    if mrope_sections is None:
+        angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    else:
+        # positions: (B, 3, S); sections sum to hd/2
+        parts = []
+        off = 0
+        for i, sec in enumerate(mrope_sections):
+            p = positions[:, i, :, None].astype(jnp.float32)       # (B,S,1)
+            parts.append(p * freqs[off:off + sec])
+            off += sec
+        angles = jnp.concatenate(parts, axis=-1)                   # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+def init_attention(key, cfg: ModelConfig, d_in: Optional[int] = None):
+    D = d_in or cfg.d_model
+    hd, H, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    pdt = jnp.float32
+    p = {
+        "wq": dense_init(ks[0], (D, H * hd), dtype=pdt),
+        "wk": dense_init(ks[1], (D, Hkv * hd), dtype=pdt),
+        "wv": dense_init(ks[2], (D, Hkv * hd), dtype=pdt),
+        "wo": dense_init(ks[3], (H * hd, D), in_axis=0, dtype=pdt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), pdt)
+        p["bk"] = jnp.zeros((Hkv * hd,), pdt)
+        p["bv"] = jnp.zeros((Hkv * hd,), pdt)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    B, S, _ = x.shape
+    hd, H, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    return q, k, v
+
+
+def _softcap(scores, cap):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def attention_scores_block(q, k, cfg: ModelConfig, scale):
+    """q: (B,Sq,H,hd), k: (B,Sk,Hkv,hd) -> (B,Hkv,G,Sq,Sk) fp32 scores."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    return _softcap(scores, cfg.attn_logit_softcap)
+
+
+def _causal_window_mask(Sq, Sk, q_offset, window):
+    """(Sq, Sk) bool mask: True = attend.  Window in *key* distance."""
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m = m & (kpos > qpos - window)
+    return m
+
+
+def full_attention(p, x, cfg: ModelConfig, positions, *, window=None,
+                   layer_scale=1.0, causal=True, kv_override=None):
+    """Materialized-scores attention (train/small-S path).
+
+    kv_override: (k, v, kv_positions) for cross-attention.
+    """
+    dt = x.dtype
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.rope and kv_override is None:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    if kv_override is not None:
+        k, v = kv_override
+    scale = layer_scale / math.sqrt(cfg.hd)
+    scores = attention_scores_block(q, k, cfg, scale)   # (B,Hkv,G,S,Sk)
+    if causal:
+        mask = _causal_window_mask(S, k.shape[1], 0, window)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(dt)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    return out @ p["wo"].astype(dt)
+
+
+def chunked_attention(p, x, cfg: ModelConfig, positions, *, window=None,
+                      layer_scale=1.0, kv_block: int = 1024, causal=True):
+    """Online-softmax attention, scanning KV blocks (32k+ prefill path).
+
+    Never materializes the (S, S) score matrix: peak temp is
+    (B, Hkv, G, S, kv_block).  Causal (+ optional sliding window) or
+    bidirectional (encoder).
+    """
+    dt = x.dtype
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    scale = layer_scale / math.sqrt(cfg.hd)
+    Hkv, G, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd
+    qg = q.reshape(B, S, Hkv, G, hd)
+
+    nb = S // kv_block
+    k_blocks = k.reshape(B, nb, kv_block, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    v_blocks = v.reshape(B, nb, kv_block, Hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    qpos = jnp.arange(S)[:, None]
+
+    def body(carry, blk):
+        m_run, l_run, acc = carry
+        kb, vb, bidx = blk
+        scores = jnp.einsum("bskgh,btkh->bkgst", qg, kb,
+                            preferred_element_type=jnp.float32) * scale
+        scores = _softcap(scores, cfg.attn_logit_softcap)
+        kpos = bidx * kv_block + jnp.arange(kv_block)[None, :]
+        if causal:
+            mask = kpos <= qpos
+            if window is not None:
+                mask = mask & (kpos > qpos - window)
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+        m_blk = jnp.max(scores, axis=-1)
+        m_new = jnp.maximum(m_run, m_blk)
+        alpha = jnp.exp(m_run - m_new)
+        pexp = jnp.exp(scores - m_new[..., None])
+        l_new = l_run * alpha + pexp.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkh->bkgsh", pexp.astype(dt), vb).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, G, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, S), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, G, S, hd), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (k_blocks, v_blocks, jnp.arange(nb)))
+    out = (acc / jnp.maximum(l_f, 1e-30)[..., None]).astype(dt)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, cfg.n_heads * cfg.hd)
+    return out @ p["wo"].astype(dt)
+
+
+def decode_attention(p, x, cfg: ModelConfig, k_cache, v_cache, position, *,
+                     window=None, layer_scale=1.0):
+    """Single-token decode: x (B,1,D); cache (B,Smax,Hkv,hd).
+
+    Returns (out, new_k_cache, new_v_cache).  Attends to cache[:position+1]
+    via masking (static shapes — XLA-friendly).
+    """
+    dt = x.dtype
+    B = x.shape[0]
+    q, k, v = _qkv(p, x, cfg)
+    pos = jnp.full((B, 1), position, jnp.int32)
+    if cfg.rope:
+        mp = jnp.broadcast_to(position, (B, 3, 1)) if cfg.mrope_sections else pos
+        q = apply_rope(q, mp if cfg.mrope_sections else pos, cfg.rope_theta,
+                       cfg.mrope_sections)
+        k = apply_rope(k, mp if cfg.mrope_sections else pos, cfg.rope_theta,
+                       cfg.mrope_sections)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, position, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, position, axis=1)
+    scale = layer_scale / math.sqrt(cfg.hd)
+    scores = attention_scores_block(q, k_cache, cfg, scale)  # (B,Hkv,G,1,S)
+    S = k_cache.shape[1]
+    kpos = jnp.arange(S)
+    mask = kpos <= position
+    if window is not None:
+        mask = mask & (kpos > position - window)
+    scores = jnp.where(mask[None, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(dt)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v_cache)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+    return out @ p["wo"].astype(dt), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None,
+             d_in: Optional[int] = None):
+    D = d_in or cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(ks[0], (D, F)),
+                "w_up": dense_init(ks[1], (D, F)),
+                "w_down": dense_init(ks[2], (F, D), in_axis=0)}
+    return {"w_up": dense_init(ks[0], (D, F)),
+            "b_up": jnp.zeros((F,), jnp.float32),
+            "w_down": dense_init(ks[1], (F, D), in_axis=0),
+            "b_down": jnp.zeros((D,), jnp.float32)}
+
+
+def mlp(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    if cfg.activation == "swiglu":
+        g = jax.nn.silu(x @ p["w_gate"].astype(dt))
+        return (g * (x @ p["w_up"].astype(dt))) @ p["w_down"].astype(dt)
+    if cfg.activation == "geglu":
+        g = jax.nn.gelu(x @ p["w_gate"].astype(dt))
+        return (g * (x @ p["w_up"].astype(dt))) @ p["w_down"].astype(dt)
+    h = jax.nn.gelu(x @ p["w_up"].astype(dt) + p["b_up"].astype(dt))
+    return h @ p["w_down"].astype(dt) + p["b_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+
+
+def init_embedding(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    p = {"tok": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks[1], (cfg.d_model, cfg.padded_vocab))
+    if cfg.learned_pos:
+        p["pos"] = embed_init(ks[1], (cfg.max_position_embeddings,
+                                      cfg.d_model))
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig, positions=None):
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.learned_pos:
+        assert positions is not None
+        x = x + jnp.take(p["pos"], positions, axis=0).astype(x.dtype)
+    return constrain(x, "batch", None, None)
+
+
+def unembed(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        logits = x @ p["tok"].T.astype(dt)
+    else:
+        logits = x @ p["unembed"].astype(dt)
+    logits = logits.astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        logits = _softcap(logits, cfg.final_logit_softcap)
+    return constrain(logits, "batch", None, "model")
+
+
+# ---------------------------------------------------------------------------
+# loss
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Token-level CE; logits fp32 (B,S,V), labels (B,S) int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

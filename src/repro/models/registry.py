@@ -1,0 +1,53 @@
+"""Family dispatch: ModelConfig -> the module implementing it."""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+from . import encdec, griffin, rwkv, transformer
+from .common import ModelConfig
+
+
+def get_model(cfg: ModelConfig) -> SimpleNamespace:
+    """Returns a namespace of the family's functions:
+    init_params, forward, loss_fn, logits_fn, decode_step, and the
+    family-appropriate cache/state constructor.
+    """
+    if cfg.family in ("dense", "moe"):
+        return SimpleNamespace(
+            init_params=transformer.init_params,
+            forward=transformer.forward,
+            loss_fn=transformer.loss_fn,
+            logits_fn=transformer.logits_fn,
+            decode_step=transformer.decode_step,
+            prefill=transformer.prefill,
+            init_cache=transformer.init_cache,
+        )
+    if cfg.family == "rwkv":
+        return SimpleNamespace(
+            init_params=rwkv.init_params,
+            forward=rwkv.forward,
+            loss_fn=rwkv.loss_fn,
+            logits_fn=rwkv.logits_fn,
+            decode_step=rwkv.decode_step,
+            init_cache=lambda c, b, _len=None: rwkv.init_state(c, b),
+        )
+    if cfg.family == "griffin":
+        return SimpleNamespace(
+            init_params=griffin.init_params,
+            forward=griffin.forward,
+            loss_fn=griffin.loss_fn,
+            logits_fn=griffin.logits_fn,
+            decode_step=griffin.decode_step,
+            init_cache=lambda c, b, _len=None: griffin.init_state(c, b),
+        )
+    if cfg.family == "encdec":
+        return SimpleNamespace(
+            init_params=encdec.init_params,
+            forward=encdec.forward,
+            loss_fn=encdec.loss_fn,
+            logits_fn=encdec.logits_fn,
+            decode_step=encdec.decode_step,
+            init_cache=encdec.init_cache,
+            prefill_encoder=encdec.prefill_encoder,
+        )
+    raise ValueError(f"unknown family: {cfg.family}")

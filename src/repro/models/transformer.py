@@ -1,0 +1,402 @@
+"""Decoder-only transformer LM (dense + MoE families), scan-over-layers.
+
+Covers: qwen1.5-110b, yi-6b, gemma2-9b, stablelm-1.6b, qwen2-vl-7b (backbone),
+llama4-maverick (interleaved MoE), deepseek-moe-16b, and the paper's GPT-2
+family.  One stacked-parameter scan keeps 80-layer configs compiling fast and
+makes remat policies per-layer.
+
+Entry points:
+    init_params(cfg, key)                       -> params
+    forward(cfg, params, tokens, ...)           -> logits, aux
+    prefill(cfg, params, tokens, ...)           -> logits, kv_cache
+    init_cache(cfg, batch, max_len)             -> kv_cache
+    decode_step(cfg, params, cache, tok, pos)   -> logits, kv_cache
+    loss_fn / logits_fn                         -> CE loss plumbing (GNB-ready)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .layers import (apply_rope, attention_scores_block, chunked_attention,
+                     cross_entropy, decode_attention, dense_init, embed,
+                     embed_init, full_attention, init_attention,
+                     init_embedding, init_mlp, layer_norm, mlp, rms_norm,
+                     unembed)
+from .moe import init_moe, moe_ffn
+
+# ---------------------------------------------------------------------------
+# params
+
+
+def _init_norm(cfg: ModelConfig):
+    if cfg.norm_type == "ln":
+        return {"scale": jnp.ones((cfg.d_model,), jnp.float32),
+                "bias": jnp.zeros((cfg.d_model,), jnp.float32)}
+    return {"scale": jnp.zeros((cfg.d_model,), jnp.float32)}
+
+
+def _norm(p, x, cfg: ModelConfig):
+    if cfg.norm_type == "ln":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def _init_dense_layer(cfg: ModelConfig, key, d_ff=None):
+    ks = jax.random.split(key, 2)
+    p = {"ln1": _init_norm(cfg), "attn": init_attention(ks[0], cfg),
+         "ln2": _init_norm(cfg), "mlp": init_mlp(ks[1], cfg, d_ff=d_ff)}
+    if cfg.post_norms:
+        p["ln1_post"] = _init_norm(cfg)
+        p["ln2_post"] = _init_norm(cfg)
+    return p
+
+
+def _init_moe_layer(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 2)
+    p = {"ln1": _init_norm(cfg), "attn": init_attention(ks[0], cfg),
+         "ln2": _init_norm(cfg), "moe": init_moe(ks[1], cfg)}
+    if cfg.post_norms:
+        p["ln1_post"] = _init_norm(cfg)
+        p["ln2_post"] = _init_norm(cfg)
+    return p
+
+
+def n_scan_groups(cfg: ModelConfig) -> int:
+    if cfg.family == "moe" and cfg.moe_every > 1:
+        return cfg.n_layers // cfg.moe_every
+    return cfg.n_layers
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kemb, klay, kfin = jax.random.split(key, 3)
+    params = {"embed": init_embedding(kemb, cfg),
+              "final_norm": _init_norm(cfg)}
+    if cfg.family == "moe" and cfg.moe_every > 1:
+        ngroups = cfg.n_layers // cfg.moe_every
+        keys = jax.random.split(klay, ngroups)
+
+        def one_group(k):
+            k1, k2 = jax.random.split(k)
+            return {"dense": _init_dense_layer(cfg, k1, d_ff=cfg.dense_d_ff),
+                    "moe": _init_moe_layer(cfg, k2)}
+
+        params["layers"] = jax.vmap(one_group)(keys)
+    elif cfg.family == "moe":
+        keys = jax.random.split(klay, cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _init_moe_layer(cfg, k))(keys)
+    else:
+        keys = jax.random.split(klay, cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _init_dense_layer(cfg, k))(keys)
+    if cfg.patch_embed_input:
+        params["patch_proj"] = dense_init(kfin, (cfg.d_model, cfg.d_model))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# per-layer flags (sliding-window pattern, attention temperature)
+
+
+def layer_windows(cfg: ModelConfig, seq_len: int) -> jnp.ndarray:
+    """Per-layer effective window (traced into masks; > seq = global)."""
+    big = jnp.asarray(1 << 30, jnp.int32)
+    n = n_scan_groups(cfg)
+    if cfg.local_global_pattern == "alternating" and cfg.local_window:
+        idx = jnp.arange(n)
+        return jnp.where(idx % 2 == 0, cfg.local_window, big)
+    if cfg.local_window:  # all-local
+        return jnp.full((n,), cfg.local_window, jnp.int32)
+    return jnp.full((n,), big, jnp.int32)
+
+
+def layer_scales(cfg: ModelConfig) -> jnp.ndarray:
+    n = n_scan_groups(cfg)
+    if cfg.attn_temperature_by_layer:
+        return 1.0 / (1.0 + jnp.arange(n, dtype=jnp.float32))
+    return jnp.ones((n,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# forward
+
+
+def _attn_dispatch(p, x, cfg, positions, window, scale, attn_impl):
+    S = x.shape[1]
+    if attn_impl == "chunked" or (attn_impl == "auto" and S > 4096):
+        return chunked_attention(p, x, cfg, positions, window=window,
+                                 layer_scale=scale)
+    return full_attention(p, x, cfg, positions, window=window,
+                          layer_scale=scale)
+
+
+def _dense_block(p, x, cfg, positions, window, scale, attn_impl):
+    h = _norm(p["ln1"], x, cfg)
+    a = _attn_dispatch(p["attn"], h, cfg, positions, window, scale, attn_impl)
+    if cfg.post_norms:
+        a = _norm(p["ln1_post"], a, cfg)
+    x = x + a
+    h = _norm(p["ln2"], x, cfg)
+    f = mlp(p["mlp"], h, cfg)
+    if cfg.post_norms:
+        f = _norm(p["ln2_post"], f, cfg)
+    from ..distributed.sharding import constrain, residual_axes
+    return constrain(x + f, *residual_axes())
+
+
+def _moe_block(p, x, cfg, positions, window, scale, attn_impl):
+    h = _norm(p["ln1"], x, cfg)
+    a = _attn_dispatch(p["attn"], h, cfg, positions, window, scale, attn_impl)
+    if cfg.post_norms:
+        a = _norm(p["ln1_post"], a, cfg)
+    x = x + a
+    h = _norm(p["ln2"], x, cfg)
+    f, aux = moe_ffn(p["moe"], h, cfg)
+    if cfg.post_norms:
+        f = _norm(p["ln2_post"], f, cfg)
+    from ..distributed.sharding import constrain, residual_axes
+    return constrain(x + f, *residual_axes()), aux
+
+
+def _embed_inputs(cfg, params, tokens, positions, patch_embeds):
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(positions[:, None], (B, 3, S))
+    rope_pos = positions
+    emb_pos = positions if positions.ndim == 2 else positions[:, 0]
+    x = embed(params["embed"], tokens, cfg, emb_pos)
+    if cfg.patch_embed_input and patch_embeds is not None:
+        # stub modality frontend: first P positions are image patches
+        P = patch_embeds.shape[1]
+        pe = patch_embeds.astype(x.dtype) @ params["patch_proj"].astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, P:]], axis=1)
+    return x, rope_pos
+
+
+def forward(cfg: ModelConfig, params, tokens, *, positions=None,
+            patch_embeds=None, attn_impl: str = "auto",
+            remat: str = "none"):
+    """tokens (B, S) -> logits (B, S, V) fp32, aux (MoE load-balance loss)."""
+    x, positions = _embed_inputs(cfg, params, tokens, positions, patch_embeds)
+    windows = layer_windows(cfg, tokens.shape[1])
+    scales = layer_scales(cfg)
+
+    if cfg.family == "moe" and cfg.moe_every > 1:
+        def body(carry, layer):
+            x, aux = carry
+            p, w, s = layer
+            x = _dense_block(p["dense"], x, cfg, positions, w, s, attn_impl)
+            x, a = _moe_block(p["moe"], x, cfg, positions, w, s, attn_impl)
+            return (x, aux + a), None
+    elif cfg.family == "moe":
+        def body(carry, layer):
+            x, aux = carry
+            p, w, s = layer
+            x, a = _moe_block(p, x, cfg, positions, w, s, attn_impl)
+            return (x, aux + a), None
+    else:
+        def body(carry, layer):
+            x, aux = carry
+            p, w, s = layer
+            return (_dense_block(p, x, cfg, positions, w, s, attn_impl),
+                    aux), None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    n = n_scan_groups(cfg)
+    if remat == "scan2" and n >= 4:
+        # nested-scan remat: the OUTER scan checkpoints every g-th carry
+        # (long-lived residuals shrink g x); the INNER body is checkpointed
+        # too, so the group recompute during backward saves only g layer
+        # inputs transiently — never a full layer's intermediates x g.
+        g = next(d for d in (8, 5, 4, 2) if n % d == 0)
+        xs = jax.tree.map(
+            lambda a: a.reshape((n // g, g) + a.shape[1:]),
+            (params["layers"], windows, scales))
+        inner_body = jax.checkpoint(body)
+
+        def outer(carry, group):
+            return jax.lax.scan(inner_body, carry, group)
+
+        (x, aux), _ = jax.lax.scan(jax.checkpoint(outer),
+                                   (x, jnp.zeros((), jnp.float32)), xs)
+    else:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   (params["layers"], windows, scales))
+    x = _norm(params["final_norm"], x, cfg)
+    return unembed(params["embed"], x, cfg), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, attn_impl="auto",
+            remat="none"):
+    """batch: {tokens, labels, [mask], [patch_embeds]} -> (loss, metrics)."""
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          patch_embeds=batch.get("patch_embeds"),
+                          positions=batch.get("positions"),
+                          attn_impl=attn_impl, remat=remat)
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def logits_fn(cfg: ModelConfig, params, batch, **kw):
+    """Logits view for the GNB estimator (Algorithm 2 line 3)."""
+    logits, _ = forward(cfg, params, batch["tokens"],
+                        patch_embeds=batch.get("patch_embeds"),
+                        positions=batch.get("positions"), **kw)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + KV-cache decode
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> dict:
+    L = cfg.n_layers  # caches are per *attention* layer (flat, not grouped)
+    shape = (L, batch_size, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, cfg.compute_dtype),
+            "v": jnp.zeros(shape, cfg.compute_dtype)}
+
+
+def _flat_layer_params(cfg: ModelConfig, params):
+    """Interleaved MoE groups -> flat per-attention-layer view for decode."""
+    if cfg.family == "moe" and cfg.moe_every > 1:
+        return params["layers"]  # handled group-wise in decode scan
+    return params["layers"]
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, position):
+    """One decode step.  tokens (B, 1) int32; position: scalar int32.
+
+    Returns (logits (B, 1, V), new_cache).  Static cache length; the causal
+    mask hides positions > ``position``.
+    """
+    B = tokens.shape[0]
+    x = embed(params["embed"], tokens, cfg,
+              jnp.full((B, 1), position, jnp.int32))
+    windows = layer_windows(cfg, cache["k"].shape[2])
+    scales = layer_scales(cfg)
+
+    grouped = cfg.family == "moe" and cfg.moe_every > 1
+    if grouped:
+        ng = n_scan_groups(cfg)
+        kc = cache["k"].reshape((ng, cfg.moe_every) + cache["k"].shape[1:])
+        vc = cache["v"].reshape((ng, cfg.moe_every) + cache["v"].shape[1:])
+    else:
+        kc, vc = cache["k"], cache["v"]
+
+    def attn_sub(p, x, k_l, v_l, w, s):
+        h = _norm(p["ln1"], x, cfg)
+        a, k_l, v_l = decode_attention(p["attn"], h, cfg, k_l, v_l, position,
+                                       window=w, layer_scale=s)
+        if cfg.post_norms:
+            a = _norm(p["ln1_post"], a, cfg)
+        return x + a, k_l, v_l
+
+    def ffn_sub(p, x):
+        h = _norm(p["ln2"], x, cfg)
+        if "moe" in p:
+            f, _ = moe_ffn(p["moe"], h, cfg)
+        else:
+            f = mlp(p["mlp"], h, cfg)
+        if cfg.post_norms:
+            f = _norm(p["ln2_post"], f, cfg)
+        return x + f
+
+    if grouped:
+        def body(x, layer):
+            p, k_g, v_g, w, s = layer
+            x, k0, v0 = attn_sub(p["dense"], x, k_g[0], v_g[0], w, s)
+            x = ffn_sub(p["dense"], x)
+            x, k1, v1 = attn_sub(p["moe"], x, k_g[1], v_g[1], w, s)
+            x = ffn_sub(p["moe"], x)
+            return x, (jnp.stack([k0, k1]), jnp.stack([v0, v1]))
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kc, vc,
+                                             windows, scales))
+        new_cache = {"k": nk.reshape(cache["k"].shape),
+                     "v": nv.reshape(cache["v"].shape)}
+    else:
+        def body(x, layer):
+            p, k_l, v_l, w, s = layer
+            x, k_l, v_l = attn_sub(p, x, k_l, v_l, w, s)
+            x = ffn_sub(p, x)
+            return x, (k_l, v_l)
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kc, vc,
+                                             windows, scales))
+        new_cache = {"k": nk, "v": nv}
+
+    x = _norm(params["final_norm"], x, cfg)
+    return unembed(params["embed"], x, cfg), new_cache
+
+
+def prefill(cfg: ModelConfig, params, tokens, *, attn_impl="auto",
+            patch_embeds=None):
+    """Forward pass that also fills a KV cache (prefill_32k serve path)."""
+    x, positions = _embed_inputs(cfg, params, tokens, None, patch_embeds)
+    windows = layer_windows(cfg, tokens.shape[1])
+    scales = layer_scales(cfg)
+    grouped = cfg.family == "moe" and cfg.moe_every > 1
+
+    def kv_of(p, h):
+        dt = h.dtype
+        B, S, _ = h.shape
+        k = (h @ p["wk"].astype(dt))
+        v = (h @ p["wv"].astype(dt))
+        if cfg.qkv_bias:
+            k = k + p["bk"].astype(dt)
+            v = v + p["bv"].astype(dt)
+        k = k.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+        if cfg.rope:
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        return k, v.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+
+    def dense_with_kv(p, x, w, s):
+        h = _norm(p["ln1"], x, cfg)
+        kv = kv_of(p["attn"], h)
+        x = _dense_block(p, x, cfg, positions, w, s, attn_impl)
+        return x, kv
+
+    def moe_with_kv(p, x, w, s):
+        h = _norm(p["ln1"], x, cfg)
+        kv = kv_of(p["attn"], h)
+        x, _ = _moe_block(p, x, cfg, positions, w, s, attn_impl)
+        return x, kv
+
+    if grouped:
+        def body(x, layer):
+            p, w, s = layer
+            x, kv0 = dense_with_kv(p["dense"], x, w, s)
+            x, kv1 = moe_with_kv(p["moe"], x, w, s)
+            return x, (jnp.stack([kv0[0], kv1[0]]), jnp.stack([kv0[1], kv1[1]]))
+    elif cfg.family == "moe":
+        def body(x, layer):
+            p, w, s = layer
+            x, kv = moe_with_kv(p, x, w, s)
+            return x, kv
+    else:
+        def body(x, layer):
+            p, w, s = layer
+            x, kv = dense_with_kv(p, x, w, s)
+            return x, kv
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], windows, scales))
+    if grouped:
+        L = cfg.n_layers
+        ks = ks.reshape((L,) + ks.shape[2:])
+        vs = vs.reshape((L,) + vs.shape[2:])
+    x = _norm(params["final_norm"], x[:, -1:], cfg)
+    # serving prefill only needs the LAST token's logits (the next-token
+    # distribution); unembedding all S positions would build a (B,S,V)
+    # buffer that cannot exist at 32k x 152k vocab.
+    return unembed(params["embed"], x, cfg), {"k": ks, "v": vs}

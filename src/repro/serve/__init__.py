@@ -1,0 +1,1 @@
+from .decode import generate, make_serve_step

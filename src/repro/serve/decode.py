@@ -1,0 +1,80 @@
+"""Batched serving: prefill + token-by-token decode with KV caches.
+
+``serve_step`` is the function the decode_32k / long_500k dry-run cells
+lower: one new token for every sequence in the batch against a cache of
+``seq_len``.  ``generate`` is the end-to-end batched request loop used by
+examples/serve.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, get_model
+
+
+def make_serve_step(cfg: ModelConfig, *, temperature: float = 0.0):
+    """Returns serve_step(params, cache, tokens, position, rng) ->
+    (next_tokens (B,1), logits, cache)."""
+    model = get_model(cfg)
+
+    def serve_step(params, cache, tokens, position, rng):
+        if cfg.family == "rwkv":
+            logits, cache = model.decode_step(cfg, params, cache, tokens)
+        else:
+            logits, cache = model.decode_step(cfg, params, cache, tokens,
+                                              position)
+        logits = logits[:, -1, :]
+        if temperature > 0.0:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt[:, None].astype(jnp.int32), logits, cache
+
+    return serve_step
+
+
+def generate(cfg: ModelConfig, params, prompt_tokens, *, max_new: int,
+             temperature: float = 0.0, seed: int = 0,
+             max_len: Optional[int] = None):
+    """Greedy/temperature batched generation.  prompt (B, S_p) int32."""
+    model = get_model(cfg)
+    B, Sp = prompt_tokens.shape
+    max_len = max_len or (Sp + max_new)
+    serve_step = jax.jit(make_serve_step(cfg, temperature=temperature))
+    rng = jax.random.PRNGKey(seed)
+
+    if cfg.family in ("dense", "moe"):
+        # prefill then decode
+        logits, cache = model.prefill(cfg, params, prompt_tokens)
+        pad = max_len - Sp
+        cache = jax.tree.map(
+            lambda c: jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            cache)
+        last = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        toks = [last]
+        pos = Sp
+    else:
+        # recurrent families: feed the prompt token-by-token
+        cache = model.init_cache(cfg, B, max_len) \
+            if cfg.family != "encdec" else None
+        assert cfg.family in ("rwkv", "griffin"), cfg.family
+        last = None
+        for t in range(Sp):
+            rng, sub = jax.random.split(rng)
+            last, _, cache = serve_step(params, cache,
+                                        prompt_tokens[:, t:t + 1],
+                                        jnp.int32(t), sub)
+        toks = [last]
+        pos = Sp
+
+    for i in range(max_new - 1):
+        rng, sub = jax.random.split(rng)
+        last, _, cache = serve_step(params, cache, toks[-1],
+                                    jnp.int32(pos), sub)
+        toks.append(last)
+        pos += 1
+    return jnp.concatenate(toks, axis=1)

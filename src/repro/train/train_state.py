@@ -1,0 +1,17 @@
+"""TrainState pytree + constructors."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray          # int32 scalar
+    params: PyTree
+    opt_state: PyTree
+    clip_state: PyTree         # global-norm clip telemetry (paper Fig 7a)
+    rng: jax.Array             # folded per step for estimator sampling

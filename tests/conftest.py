@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run sets its own
+# XLA_FLAGS in a separate process; never set host_platform_device_count
+# here — smoke tests and benches must see 1 device).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,69 @@
+"""int8 gradient compression: error bounds, error feedback, wire size."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.compression import (GradCompressor, _quantize,
+                                           compressed_bytes)
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3.0
+    _, scale, deq = _quantize(x, 256, jax.random.PRNGKey(1))
+    err = np.abs(np.asarray(deq - x))
+    # error per element <= scale (one quantization bin, stochastic rounding)
+    bound = np.repeat(np.asarray(scale)[:, 0], 256)[:1000]
+    assert np.all(err <= bound + 1e-7)
+
+
+def test_stochastic_rounding_unbiased():
+    x = jnp.full((256,), 0.3)
+    keys = jax.random.split(jax.random.PRNGKey(2), 500)
+    deqs = jax.vmap(lambda k: _quantize(x, 256, k)[2])(keys)
+    np.testing.assert_allclose(float(deqs.mean()), 0.3, atol=5e-3)
+
+
+def test_error_feedback_carries_residual():
+    comp = GradCompressor(block=64)
+    g = {"w": jax.random.normal(jax.random.PRNGKey(3), (100,))}
+    st_ = comp.init(g)
+    deq, st2 = comp.roundtrip(g, st_, jax.random.PRNGKey(4))
+    resid = np.asarray(st2.error["w"])
+    np.testing.assert_allclose(resid, np.asarray(g["w"]) - np.asarray(deq["w"]),
+                               atol=1e-6)
+
+
+def test_error_feedback_preserves_signal_over_time():
+    """Sum of dequantized grads tracks sum of true grads (EF property)."""
+    comp = GradCompressor(block=64)
+    true_sum = np.zeros(64)
+    deq_sum = np.zeros(64)
+    st_ = comp.init({"w": jnp.zeros((64,))})
+    for i in range(50):
+        g = {"w": jnp.asarray(np.random.default_rng(i).normal(size=64) * 0.01)}
+        deq, st_ = comp.roundtrip(g, st_, jax.random.PRNGKey(i))
+        true_sum += np.asarray(g["w"])
+        deq_sum += np.asarray(deq["w"])
+    # residual is bounded by one quantization step, not growing with T
+    resid = np.abs(true_sum - deq_sum)
+    assert np.max(resid) < 0.01, np.max(resid)
+
+
+def test_wire_bytes_4x_smaller_than_fp32():
+    g = {"w": jnp.zeros((1 << 20,))}
+    wire = compressed_bytes(g, block=256)
+    fp32 = (1 << 20) * 4
+    assert wire < fp32 / 3.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(min_value=1, max_value=5000),
+       scale=st.floats(min_value=1e-6, max_value=1e3),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_quantize_property(n, scale, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+    _, _, deq = _quantize(x, 256, jax.random.PRNGKey(seed + 1))
+    rel = float(jnp.max(jnp.abs(deq - x)) / (jnp.max(jnp.abs(x)) + 1e-12))
+    assert rel <= 1.0 / 127 + 1e-3  # one int8 bin of the block max

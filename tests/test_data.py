@@ -1,0 +1,53 @@
+"""Data pipeline: determinism, host sharding, memmap format."""
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, MemmapTokens, SyntheticLM, host_slice
+
+
+def test_batch_is_pure_function_of_step():
+    cfg = DataConfig(seq_len=32, global_batch=4, vocab_size=100, seed=7)
+    src = SyntheticLM(cfg)
+    a = src.batch_at(13)
+    b = src.batch_at(13)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = src.batch_at(14)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(seq_len=16, global_batch=2, vocab_size=50, seed=0)
+    b = SyntheticLM(cfg).batch_at(0)
+    assert b["tokens"].shape == (2, 16)
+    assert b["labels"].shape == (2, 16)
+
+
+def test_learnable_structure():
+    """Bigram table makes next-token partially predictable (loss can drop)."""
+    cfg = DataConfig(seq_len=64, global_batch=8, vocab_size=32, seed=1)
+    src = SyntheticLM(cfg)
+    b = src.batch_at(0)
+    hits = (src.next_tok[b["tokens"]] == b["labels"]).mean()
+    assert hits > 0.4  # ~70% deterministic transitions
+
+
+def test_host_slice_partitions():
+    cfg = DataConfig(seq_len=8, global_batch=8, vocab_size=10, seed=0)
+    b = SyntheticLM(cfg).batch_at(0)
+    parts = [host_slice(b, i, 4) for i in range(4)]
+    stacked = np.sort(np.concatenate([p["tokens"] for p in parts]), axis=None)
+    np.testing.assert_array_equal(stacked, np.sort(b["tokens"], axis=None))
+    assert all(p["tokens"].shape[0] == 2 for p in parts)
+
+
+def test_memmap_source(tmp_path):
+    data = np.arange(10000, dtype=np.uint16) % 512
+    path = tmp_path / "train.bin"
+    data.tofile(path)
+    cfg = DataConfig(seq_len=64, global_batch=4, vocab_size=512, seed=0,
+                     source="memmap", path=str(path))
+    src = MemmapTokens(cfg)
+    b = src.batch_at(3)
+    assert b["tokens"].shape == (4, 64)
+    # labels are next-token shifted views of the same stream
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])

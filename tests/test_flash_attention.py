@@ -1,0 +1,58 @@
+"""Flash-attention Pallas kernel vs the plain-softmax oracle
+(interpret mode; shape x GQA x causality sweep + hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref
+
+
+def _qkv(key, B, H, Hkv, S, hd, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype) * 0.5
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd), dtype) * 0.5
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd), dtype) * 0.5
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,hd,bq,bk", [
+    (1, 2, 2, 128, 64, 64, 64),     # MHA
+    (2, 4, 2, 128, 64, 64, 32),     # GQA 2:1
+    (1, 8, 1, 256, 64, 128, 128),   # MQA
+    (1, 2, 2, 128, 128, 128, 64),   # head_dim 128
+    (2, 2, 1, 64, 32, 64, 64),      # single q block
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_oracle(B, H, Hkv, S, hd, bq, bk, causal):
+    q, k, v = _qkv(jax.random.PRNGKey(S + hd), B, H, Hkv, S, hd)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16():
+    q, k, v = _qkv(jax.random.PRNGKey(0), 1, 2, 2, 128, 64, jnp.bfloat16)
+    out = flash_attention(q, k, v, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30),
+       s_blocks=st.integers(1, 4),
+       causal=st.booleans())
+def test_flash_property(seed, s_blocks, causal):
+    S = 64 * s_blocks
+    q, k, v = _qkv(jax.random.PRNGKey(seed), 1, 2, 1, S, 64)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-5, atol=5e-5)
+    # rows are convex combinations of v rows: output bounded by v range
+    assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(v))) + 1e-4

@@ -1,0 +1,82 @@
+"""The HLO cost analyzer vs ground truth (unrolled graphs / analytics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo, _numel, _type_bytes
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_type_bytes():
+    assert _type_bytes("f32[16,32]{1,0}") == 16 * 32 * 4
+    assert _type_bytes("bf16[8]") == 16
+    assert _type_bytes("(f32[4], s32[2,2])") == 16 + 16
+    assert _type_bytes("pred[10]") == 10
+
+
+def test_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    c = _compile(lambda x, y: x @ y, a, b)
+    acc = analyze_hlo(c.as_text())
+    assert abs(acc["flops"] - 2 * 64 * 128 * 256) / (2 * 64 * 128 * 256) < 0.05
+
+
+def test_scan_trip_count_multiplies():
+    """Scan flops scale linearly with layer count (the XLA bug we fix)."""
+    def make(n):
+        ws = jax.ShapeDtypeStruct((n, 64, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+
+        def f(w, x):
+            def body(h, wl):
+                return jnp.tanh(h @ wl), None
+            h, _ = jax.lax.scan(body, x, w)
+            return h.sum()
+        return analyze_hlo(_compile(jax.grad(f), ws, x).as_text())["flops"]
+
+    f4, f8 = make(4), make(8)
+    assert 1.8 < f8 / f4 < 2.2, (f4, f8)
+
+
+def test_scan_matches_unrolled():
+    def make(n, scan):
+        ws = jax.ShapeDtypeStruct((n, 64, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+
+        def f(w, x):
+            if scan:
+                def body(h, wl):
+                    return jnp.tanh(h @ wl), None
+                h, _ = jax.lax.scan(body, x, w)
+            else:
+                h = x
+                for i in range(n):
+                    h = jnp.tanh(h @ w[i])
+            return h.sum()
+        return analyze_hlo(_compile(jax.grad(f), ws, x).as_text())["flops"]
+
+    s, u = make(6, True), make(6, False)
+    assert abs(s - u) / u < 0.25, (s, u)
+
+
+def test_nested_scans():
+    """Inner scan's trips multiply through the outer scan."""
+    def f(w, x):
+        def outer(h, wl):
+            def inner(h2, _):
+                return jnp.tanh(h2 @ wl), None
+            h2, _ = jax.lax.scan(inner, h, None, length=3)
+            return h2, None
+        h, _ = jax.lax.scan(outer, x, w)
+        return h.sum()
+
+    ws = jax.ShapeDtypeStruct((4, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    acc = analyze_hlo(_compile(f, ws, x).as_text())
+    expect = 2 * 32 * 64 * 64 * 3 * 4  # dot flops x inner x outer
+    assert 0.8 < acc["flops"] / expect < 1.3, (acc["flops"], expect)

@@ -1,0 +1,111 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.sophia_update import (adamw_fused_block, hessian_ema_block,
+                                         sophia_fused_block)
+
+HYPER = dict(lr=3e-4, beta1=0.96, gamma=0.05, eps=1e-12, weight_decay=0.2)
+
+
+def _rand(key, shape, scale=1.0, positive=False):
+    x = jax.random.normal(key, shape, jnp.float32) * scale
+    return jnp.abs(x) if positive else x
+
+
+@pytest.mark.parametrize("n,block", [
+    (256, 256), (512, 256), (1000, 256), (4096, 1024),
+    (128 * 1024, 128 * 1024), (3 * 128 * 1024, 128 * 1024),
+])
+def test_sophia_fused_shapes(n, block):
+    ks = jax.random.split(jax.random.PRNGKey(n), 4)
+    p, g = _rand(ks[0], (n,)), _rand(ks[1], (n,), 0.1)
+    m, h = _rand(ks[2], (n,), 0.1), _rand(ks[3], (n,), 0.01, positive=True)
+    rp, rm, rc = ref.sophia_fused_ref(p, m, h, g, **HYPER)
+    tp, tm, cf = ops.sophia_fused_apply({"w": p}, {"w": m}, {"w": h},
+                                        {"w": g}, block=block, **HYPER)
+    np.testing.assert_allclose(np.asarray(tp["w"]), np.asarray(rp),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(tm["w"]), np.asarray(rm),
+                               rtol=1e-5, atol=1e-7)
+    assert abs(float(cf) - float(rc) / n) < 1e-6
+
+
+@pytest.mark.parametrize("shape", [(64,), (8, 128), (4, 16, 32), (3, 5, 7)])
+def test_sophia_fused_nd_shapes(shape):
+    ks = jax.random.split(jax.random.PRNGKey(hash(shape) % 2**31), 4)
+    p, g = _rand(ks[0], shape), _rand(ks[1], shape, 0.1)
+    m, h = _rand(ks[2], shape, 0.1), _rand(ks[3], shape, 0.01, positive=True)
+    rp, rm, _ = ref.sophia_fused_ref(p, m, h, g, **HYPER)
+    tp, tm, _ = ops.sophia_fused_apply({"w": p}, {"w": m}, {"w": h},
+                                       {"w": g}, block=128, **HYPER)
+    np.testing.assert_allclose(np.asarray(tp["w"]), np.asarray(rp),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_sophia_fused_negative_curvature():
+    """Negative h -> sign fallback must survive the kernel unchanged."""
+    n = 256
+    p = jnp.ones((n,))
+    m = jnp.linspace(-1, 1, n)
+    h = -jnp.ones((n,))
+    g = jnp.zeros((n,))
+    rp, rm, _ = ref.sophia_fused_ref(p, m, h, g, **HYPER)
+    tp, tm, _ = ops.sophia_fused_apply({"w": p}, {"w": m}, {"w": h},
+                                       {"w": g}, block=256, **HYPER)
+    np.testing.assert_allclose(np.asarray(tp["w"]), np.asarray(rp), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,block", [(1000, 256), (4096, 512)])
+def test_hessian_ema_kernel(n, block):
+    ks = jax.random.split(jax.random.PRNGKey(n + 1), 2)
+    h = _rand(ks[0], (n,), positive=True)
+    e = _rand(ks[1], (n,), positive=True)
+    r = ref.hessian_ema_ref(h, 240.0 * e, beta2=0.99)
+    t = ops.hessian_ema_apply({"w": h}, {"w": e}, beta2=0.99, scale=240.0,
+                              block=block)
+    np.testing.assert_allclose(np.asarray(t["w"]), np.asarray(r), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n,block,step", [(777, 128, 1.0), (4096, 1024, 100.0)])
+def test_adamw_fused_kernel(n, block, step):
+    ks = jax.random.split(jax.random.PRNGKey(n + 2), 4)
+    p, m, g = (_rand(k, (n,)) for k in ks[:3])
+    v = _rand(ks[3], (n,), positive=True)
+    kw = dict(lr=1e-3, beta1=0.9, beta2=0.95, eps=1e-8, weight_decay=0.1)
+    r = ref.adamw_fused_ref(p, m, v, g, step=step, **kw)
+    t = ops.adamw_fused_apply({"w": p}, {"w": m}, {"w": v}, {"w": g},
+                              step=step, block=block, **kw)
+    for i in range(3):
+        np.testing.assert_allclose(np.asarray(t[i]["w"]), np.asarray(r[i]),
+                                   rtol=2e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=2048),
+    seed=st.integers(min_value=0, max_value=2**30),
+    gamma=st.floats(min_value=1e-3, max_value=1.0),
+    lr=st.floats(min_value=1e-5, max_value=1.0),
+)
+def test_sophia_fused_property(n, seed, gamma, lr):
+    """Property: kernel == oracle for arbitrary sizes/hypers; update bounded."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    p, g = _rand(ks[0], (n,)), _rand(ks[1], (n,))
+    m = _rand(ks[2], (n,))
+    h = _rand(ks[3], (n,))  # mixed-sign curvature
+    hyper = dict(lr=lr, beta1=0.96, gamma=gamma, eps=1e-12, weight_decay=0.0)
+    rp, rm, _ = ref.sophia_fused_ref(p, m, h, g, **hyper)
+    tp, tm, _ = ops.sophia_fused_apply({"w": p}, {"w": m}, {"w": h},
+                                       {"w": g}, block=256, **hyper)
+    np.testing.assert_allclose(np.asarray(tp["w"]), np.asarray(rp),
+                               rtol=1e-4, atol=1e-6)
+    # invariant: |delta theta| <= lr (wd=0), up to one fp32 ulp of theta
+    # (fl(p - lr*u) - p rounds by <= ulp(p)/2)
+    delta = np.asarray(tp["w"]) - np.asarray(p)
+    ulp = np.float32(1.2e-7) * max(1.0, float(np.max(np.abs(p))))
+    assert np.max(np.abs(delta)) <= lr * (1 + 1e-5) + ulp

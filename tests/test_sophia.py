@@ -1,0 +1,113 @@
+"""Unit tests: Sophia (Algorithm 3) semantics, exactly as pseudo-coded."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import apply_updates, sophia, sophia_g, sophia_h
+from repro.core.sophia import scale_by_sophia
+
+
+def _manual_sophia_run(grads_seq, hhat_seq, lr, beta1, beta2, gamma, eps, wd,
+                       k, theta0):
+    """Direct transcription of Algorithm 3 (numpy)."""
+    theta = np.array(theta0, dtype=np.float64)
+    m = np.zeros_like(theta)
+    h = np.zeros_like(theta)
+    out = []
+    for t, g in enumerate(grads_seq):
+        m = beta1 * m + (1 - beta1) * np.asarray(g)
+        if t % k == 0:
+            h = beta2 * h + (1 - beta2) * np.asarray(hhat_seq[t])
+        theta = theta - lr * wd * theta                     # line 12
+        u = np.clip(m / np.maximum(gamma * h, eps), -1, 1)  # line 13
+        theta = theta - lr * u
+        out.append(theta.copy())
+    return out
+
+
+def test_matches_algorithm3_pseudocode():
+    rng = np.random.default_rng(0)
+    d = 16
+    T, k = 20, 5
+    grads = [rng.normal(size=d).astype(np.float32) for _ in range(T)]
+    hhats = [np.abs(rng.normal(size=d)).astype(np.float32) for _ in range(T)]
+    lr, b1, b2, gamma, eps, wd = 0.01, 0.96, 0.99, 0.05, 1e-12, 0.2
+
+    opt = sophia(lr, beta1=b1, beta2=b2, gamma=gamma, eps=eps,
+                 weight_decay=wd)
+    theta = jnp.zeros((d,)) + 1.0
+    state = opt.init(theta)
+    ours = []
+    for t in range(T):
+        if t % k == 0:
+            state = opt.update_hessian(jnp.asarray(hhats[t]), state)
+        updates, state = opt.update(jnp.asarray(grads[t]), state, theta)
+        theta = apply_updates(theta, updates)
+        ours.append(np.asarray(theta))
+
+    ref = _manual_sophia_run(grads, hhats, lr, b1, b2, gamma, eps, wd, k,
+                             np.ones(d))
+    for t in range(T):
+        np.testing.assert_allclose(ours[t], ref[t], rtol=2e-5, atol=2e-6)
+
+
+def test_negative_curvature_falls_back_to_sign():
+    """h < 0 => update is exactly -lr * sign(m) (SignSGD backup)."""
+    opt = sophia(0.1, beta1=0.0, weight_decay=0.0)
+    theta = jnp.array([1.0, -1.0, 2.0])
+    state = opt.init(theta)
+    state = opt.update_hessian(jnp.array([-5.0, -1e-3, -100.0]), state)
+    g = jnp.array([0.3, -0.7, 1e-4])
+    updates, state = opt.update(g, state, theta)
+    np.testing.assert_allclose(np.asarray(updates),
+                               -0.1 * np.sign(np.asarray(g)), rtol=1e-6)
+
+
+def test_clip_bounds_worst_case_update():
+    opt = sophia(1.0, beta1=0.0, weight_decay=0.0)
+    theta = jnp.zeros((8,))
+    state = opt.init(theta)
+    state = opt.update_hessian(jnp.full((8,), 1e-8), state)  # tiny curvature
+    updates, _ = opt.update(jnp.ones((8,)) * 100.0, state, theta)
+    assert float(jnp.max(jnp.abs(updates))) <= 1.0 + 1e-6
+
+
+def test_gamma_rescaling_identity():
+    """eta*clip(m/max(gamma h, eps),1) == (eta/gamma)*clip(m/max(h,eps/gamma),gamma)."""
+    rng = np.random.default_rng(1)
+    m = jnp.asarray(rng.normal(size=32).astype(np.float32))
+    h = jnp.asarray(np.abs(rng.normal(size=32)).astype(np.float32))
+    eta, gamma, eps = 0.3, 0.05, 1e-12
+    lhs = eta * jnp.clip(m / jnp.maximum(gamma * h, eps), -1, 1)
+    rhs = (eta / gamma) * jnp.clip(m / jnp.maximum(h, eps / gamma),
+                                   -gamma, gamma)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-5)
+
+
+def test_clip_fraction_telemetry():
+    core = scale_by_sophia(gamma=1.0)
+    theta = {"a": jnp.ones((10,)), "b": jnp.ones((10,))}
+    state = core.init(theta)
+    h = {"a": jnp.full((10,), 1e6), "b": jnp.full((10,), 1e-9)}
+    state = state._replace(h=jax.tree.map(lambda x: x / (1 - 0.99), h))
+    g = {"a": jnp.ones((10,)), "b": jnp.ones((10,))}
+    _, state = core.update(g, state, theta)
+    # "a" has huge curvature (never clips), "b" tiny (always clips)
+    assert abs(float(state.clip_fraction) - 0.5) < 1e-6
+
+
+def test_sophia_h_g_defaults():
+    assert sophia_h(1e-3) is not None  # gamma=0.01 path
+    assert sophia_g(1e-3) is not None  # gamma=0.05 path
+
+
+def test_hessian_ema_line9():
+    opt = sophia(0.1, beta2=0.9)
+    theta = jnp.zeros((4,))
+    state = opt.init(theta)
+    state = opt.update_hessian(jnp.full((4,), 2.0), state)
+    np.testing.assert_allclose(np.asarray(state.h), 0.1 * 2.0, rtol=1e-6)
+    state = opt.update_hessian(jnp.full((4,), 1.0), state)
+    np.testing.assert_allclose(np.asarray(state.h), 0.9 * 0.2 + 0.1, rtol=1e-6)
+    assert int(state.hess_count) == 2
