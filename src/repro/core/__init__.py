@@ -1,7 +1,10 @@
 """repro.core — Sophia (the paper's contribution) + optimizer substrate.
 
 Public API:
-    sophia, sophia_h, sophia_g          — Algorithm 3
+    sophia, sophia_h, sophia_g          — Algorithm 3 (pytree reference impl)
+    OptimizerEngine, EngineState        — flat-buffer engine (the trainer's
+                                          single update path; fused Pallas or
+                                          pure-jnp backend over flat shards)
     hutchinson_estimator, gnb_estimator — Section 2.3 estimators
     adamw, lion, signgd, adahessian     — paper baselines
     clip_by_global_norm                 — stability telemetry (Fig 7a)
@@ -11,9 +14,12 @@ from .types import (GradientTransformation, HessianAwareTransformation,
                     apply_updates, chain, global_norm, tree_zeros_like)
 from .sophia import (SophiaState, scale_by_sophia, sophia, sophia_g, sophia_h)
 from .estimators import (empirical_fisher_estimator, exact_diag_hessian,
-                         gnb_estimator, hutchinson_estimator, sample_labels,
+                         gnb_estimator, gnb_estimator_sq,
+                         hutchinson_estimator, sample_labels,
                          subsample_batch)
 from .baselines import adahessian, adamw, lion, sgd, signgd
+from .engine import (EngineState, OptimizerEngine, ShardLayout, build_layout,
+                     engine_partition_specs, ravel_shards, unravel_shards)
 from .clipping import ClipState, clip_by_global_norm, clip_trigger_rate
 from .schedule import (constant, inverse_sqrt, linear_warmup_cosine,
                        linear_warmup_linear_decay)

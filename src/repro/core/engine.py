@@ -1,0 +1,410 @@
+"""Flat-buffer optimizer engine: one update path for every optimizer.
+
+The paper's pitch is negligible per-step overhead (Section 4.3); the way to
+keep that true in a production system is to make the optimizer update pure
+streaming work.  This engine ravels the parameter pytree's *optimizer state*
+once at init into a small set of dtype-homogeneous flat shards — one shard
+per parameter dtype, tail-padded to a multiple of the kernel block — and
+keeps it flat forever.  A static :class:`ShardLayout` (leaf offsets + shapes)
+maps between the model-facing pytree view and the flat view, so each train
+step does exactly:
+
+    params, grads --ravel-->  one flat buffer per dtype shard
+    one pallas_call grid sweep per shard (or the pure-jnp reference)
+    flat params   --slice-->  parameter pytree
+
+There is no per-leaf pad/unpad anywhere in the step: the single tail pad per
+shard is fused into the ravel concatenate, and padded elements are fixed
+points of every update rule here (p = m = h = g = 0 stays 0), so the pad is
+paid once at init, never per step.  This mirrors how AdaHessian (Yao et al.,
+2021) and distributed Shampoo (Anil et al., 2021) organize second-order
+state, and makes the Sophia-vs-AdamW overhead comparison apples-to-apples:
+both run through literally the same machinery.
+
+Backends:
+    * ``reference`` — pure jnp over the flat shards (kernels/ref.py math);
+    * ``pallas``    — fused kernels (kernels/sophia_update.py), one grid
+      sweep per shard, clip-fraction telemetry computed in-kernel.
+
+Swapping one for the other is a one-line change and must agree to fp32
+tolerance (tests/test_engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ref as kref
+from ..kernels import sophia_update as kblk
+
+PyTree = Any
+
+BLOCK = kblk.BLOCK
+
+#: trainer-level optimizer names -> engine family
+FAMILIES = {
+    "sophia_g": "sophia",
+    "sophia_h": "sophia",
+    "adamw": "adamw",
+    "lion": "lion",
+    "signgd": "signgd",
+    "adahessian": "adahessian",
+    "sgd": "sgd",
+}
+
+_CURVATURE_FAMILIES = ("sophia", "adamw", "adahessian")
+_HESSIAN_AWARE = ("sophia", "adahessian")
+
+
+# ---------------------------------------------------------------------------
+# Static layout
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardLayout:
+    """Static map between a parameter pytree and its flat dtype shards."""
+
+    treedef: Any
+    leaf_shapes: Tuple[Tuple[int, ...], ...]
+    leaf_dtypes: Tuple[Any, ...]
+    leaf_shard: Tuple[int, ...]    # which shard each leaf lives in
+    leaf_offset: Tuple[int, ...]   # element offset of the leaf in its shard
+    shard_dtypes: Tuple[Any, ...]
+    shard_sizes: Tuple[int, ...]   # padded: multiples of ``block``
+    shard_used: Tuple[int, ...]    # true element counts (pad excluded)
+    block: int
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shard_sizes)
+
+    @property
+    def n_params(self) -> int:
+        return sum(self.shard_used)
+
+    def manifest(self) -> dict:
+        """JSON-serializable summary (stored in checkpoint manifests)."""
+        return {
+            "block": self.block,
+            "n_leaves": len(self.leaf_shapes),
+            "n_params": self.n_params,
+            "shards": [
+                {"dtype": str(jnp.dtype(d)), "size": int(s), "used": int(u)}
+                for d, s, u in zip(self.shard_dtypes, self.shard_sizes,
+                                   self.shard_used)
+            ],
+        }
+
+
+def build_layout(params: PyTree, *, block: int = BLOCK) -> ShardLayout:
+    """Group leaves into dtype-homogeneous shards, assign static offsets."""
+    leaves, treedef = jax.tree.flatten(params)
+    leaf_shapes = tuple(tuple(l.shape) for l in leaves)
+    leaf_dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    shard_dtypes: list = []
+    used: list = []
+    leaf_shard, leaf_offset = [], []
+    for shape, dt in zip(leaf_shapes, leaf_dtypes):
+        if dt not in shard_dtypes:
+            shard_dtypes.append(dt)
+            used.append(0)
+        si = shard_dtypes.index(dt)
+        leaf_shard.append(si)
+        leaf_offset.append(used[si])
+        used[si] += math.prod(shape)
+    sizes = tuple(-(-u // block) * block for u in used)
+    return ShardLayout(treedef=treedef, leaf_shapes=leaf_shapes,
+                       leaf_dtypes=leaf_dtypes, leaf_shard=tuple(leaf_shard),
+                       leaf_offset=tuple(leaf_offset),
+                       shard_dtypes=tuple(shard_dtypes), shard_sizes=sizes,
+                       shard_used=tuple(used), block=block)
+
+
+def ravel_shards(layout: ShardLayout, tree: PyTree, *,
+                 dtype=None) -> Tuple[jnp.ndarray, ...]:
+    """Pytree -> flat shards.  One concatenate per shard; the tail pad is a
+    constant-zeros operand of that concatenate, not a per-leaf pad op.
+
+    ``dtype`` overrides the shard dtype (grads/estimates ravel to fp32)."""
+    leaves = jax.tree.leaves(tree)
+    parts: list = [[] for _ in layout.shard_sizes]
+    for leaf, si in zip(leaves, layout.leaf_shard):
+        tdt = dtype if dtype is not None else layout.shard_dtypes[si]
+        parts[si].append(leaf.reshape(-1).astype(tdt))
+    out = []
+    for si, chunks in enumerate(parts):
+        tdt = dtype if dtype is not None else layout.shard_dtypes[si]
+        pad = layout.shard_sizes[si] - layout.shard_used[si]
+        if pad:
+            chunks = chunks + [jnp.zeros((pad,), tdt)]
+        out.append(chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks))
+    return tuple(out)
+
+
+def unravel_shards(layout: ShardLayout,
+                   shards: Tuple[jnp.ndarray, ...]) -> PyTree:
+    """Flat shards -> pytree (static slices, no pad/unpad)."""
+    leaves = []
+    for shape, dt, si, off in zip(layout.leaf_shapes, layout.leaf_dtypes,
+                                  layout.leaf_shard, layout.leaf_offset):
+        n = math.prod(shape)
+        leaves.append(shards[si][off:off + n].reshape(shape).astype(dt))
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Engine state
+
+
+class EngineState(NamedTuple):
+    """Optimizer state over flat shards (lives flat across the whole run).
+
+    ``m`` is the first-moment slot; ``h`` is the curvature / second-moment
+    slot (Sophia's diagonal-Hessian EMA, AdamW's v, AdaHessian's EMA of
+    squared estimates) — ``()`` for families that don't need one."""
+
+    count: jnp.ndarray            # step counter t
+    m: Tuple[jnp.ndarray, ...]
+    h: Tuple[jnp.ndarray, ...]
+    hess_count: jnp.ndarray       # number of Hessian refreshes so far
+    clip_fraction: jnp.ndarray    # telemetry (paper Fig 9a); 0 if untracked
+
+
+# ---------------------------------------------------------------------------
+# The engine
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+class OptimizerEngine:
+    """One update path for reference and fused optimizers over flat shards.
+
+    Usage::
+
+        eng = OptimizerEngine("sophia_g", hypers=dict(beta1=.96, beta2=.99,
+                              gamma=.05, eps=1e-12, weight_decay=.2,
+                              clip_threshold=1.0), backend="pallas")
+        opt_state = eng.init(params)
+        params, opt_state = eng.step(opt_state, params, grads, lr)
+        # every k steps:
+        opt_state = eng.update_hessian(opt_state, est, scale=B, params=params)
+    """
+
+    def __init__(self, optimizer: str, *, hypers: dict,
+                 backend: str = "reference", block: int = BLOCK,
+                 state_dtype=jnp.float32,
+                 interpret: Optional[bool] = None):
+        if optimizer not in FAMILIES:
+            raise ValueError(f"unknown optimizer {optimizer!r}")
+        if backend not in ("reference", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.optimizer = optimizer
+        self.family = FAMILIES[optimizer]
+        self.hypers = dict(hypers)
+        self.backend = backend
+        self.block = block
+        self.state_dtype = jnp.dtype(state_dtype)
+        self.interpret = interpret
+        self._layouts: dict = {}
+
+    # -- properties ---------------------------------------------------------
+
+    @property
+    def needs_curvature(self) -> bool:
+        return self.family in _CURVATURE_FAMILIES
+
+    @property
+    def hessian_aware(self) -> bool:
+        return self.family in _HESSIAN_AWARE
+
+    @property
+    def tracks_clip_fraction(self) -> bool:
+        return self.family == "sophia"
+
+    def _interp(self) -> bool:
+        return _interpret_default() if self.interpret is None else self.interpret
+
+    # -- layout -------------------------------------------------------------
+
+    def layout(self, params: PyTree) -> ShardLayout:
+        leaves = jax.tree.leaves(params)
+        key = (jax.tree.structure(params),
+               tuple(tuple(l.shape) for l in leaves),
+               tuple(str(jnp.dtype(l.dtype)) for l in leaves))
+        lay = self._layouts.get(key)
+        if lay is None:
+            lay = build_layout(params, block=self.block)
+            self._layouts[key] = lay
+        return lay
+
+    def describe(self, params: PyTree) -> dict:
+        return self.layout(params).manifest()
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, params: PyTree) -> EngineState:
+        lay = self.layout(params)
+        zeros = tuple(jnp.zeros((s,), self.state_dtype)
+                      for s in lay.shard_sizes)
+        return EngineState(
+            count=jnp.zeros((), jnp.int32),
+            m=zeros,
+            h=zeros if self.needs_curvature else (),
+            hess_count=jnp.zeros((), jnp.int32),
+            clip_fraction=jnp.zeros((), jnp.float32),
+        )
+
+    # -- the step -----------------------------------------------------------
+
+    def step(self, state: EngineState, params: PyTree, grads: PyTree,
+             lr) -> tuple:
+        """One optimizer step.  ``lr`` is a traced scalar (the trainer
+        evaluates the schedule once, outside the engine).
+
+        Returns ``(new_params, new_state)``."""
+        lay = self.layout(params)
+        lr = jnp.asarray(lr, jnp.float32)
+        c1 = (state.count + 1).astype(jnp.float32)  # bias-correction step
+        p_sh = ravel_shards(lay, params)
+        g_sh = ravel_shards(lay, grads, dtype=jnp.float32)
+        new_p, new_m, new_h = [], [], []
+        nclip = jnp.zeros((), jnp.float32)
+        for i in range(lay.n_shards):
+            h_i = state.h[i] if self.needs_curvature else None
+            p_i, m_i, h_i, nclip_i = self._step_shard(
+                p_sh[i], state.m[i], h_i, g_sh[i], lr, c1)
+            new_p.append(p_i)
+            new_m.append(m_i)
+            if h_i is not None:
+                new_h.append(h_i)
+            if nclip_i is not None:
+                nclip = nclip + nclip_i.astype(jnp.float32)
+        clip_fraction = (nclip / lay.n_params if self.tracks_clip_fraction
+                         else state.clip_fraction)
+        new_state = state._replace(
+            count=state.count + 1, m=tuple(new_m),
+            h=tuple(new_h) if new_h else state.h,
+            clip_fraction=jnp.asarray(clip_fraction, jnp.float32))
+        return unravel_shards(lay, tuple(new_p)), new_state
+
+    def _step_shard(self, p, m, h, g, lr, c1):
+        """Dispatch one flat shard to the backend.  Returns
+        (p', m', h' or None, n_clipped or None)."""
+        hp = self.hypers
+        fused = self.backend == "pallas"
+        kw = dict(block=self.block, interpret=self._interp()) if fused else {}
+        fam = self.family
+        if fam == "sophia":
+            args = dict(beta1=hp["beta1"], gamma=hp["gamma"], eps=hp["eps"],
+                        weight_decay=hp["weight_decay"],
+                        clip_threshold=hp["clip_threshold"])
+            if fused:
+                p2, m2, nclip = kblk.sophia_fused_block(p, m, h, g, lr,
+                                                        **args, **kw)
+                return p2, m2, h, jnp.sum(nclip)
+            p2, m2, nclip = kref.sophia_fused_ref(p, m, h, g, lr=lr, **args)
+            return p2, m2, h, nclip
+        if fam == "adamw":
+            args = dict(beta1=hp["beta1"], beta2=hp["beta2"], eps=hp["eps"],
+                        weight_decay=hp["weight_decay"])
+            if fused:
+                p2, m2, v2 = kblk.adamw_fused_block(p, m, h, g, lr, c1,
+                                                    **args, **kw)
+            else:
+                p2, m2, v2 = kref.adamw_fused_ref(p, m, h, g, lr=lr, step=c1,
+                                                  **args)
+            return p2, m2, v2, None
+        if fam == "adahessian":
+            args = dict(beta1=hp["beta1"], beta2=hp["beta2"], eps=hp["eps"],
+                        weight_decay=hp["weight_decay"])
+            if fused:
+                p2, m2 = kblk.adahessian_fused_block(p, m, h, g, lr, c1,
+                                                     **args, **kw)
+            else:
+                p2, m2 = kref.adahessian_fused_ref(p, m, h, g, lr=lr, step=c1,
+                                                   **args)
+            return p2, m2, h, None
+        if fam == "lion":
+            args = dict(beta1=hp["beta1"], beta2=hp["beta2"],
+                        weight_decay=hp["weight_decay"])
+            if fused:
+                p2, m2 = kblk.lion_fused_block(p, m, g, lr, **args, **kw)
+            else:
+                p2, m2 = kref.lion_fused_ref(p, m, g, lr=lr, **args)
+            return p2, m2, None, None
+        if fam == "signgd":
+            args = dict(beta1=hp["beta1"], weight_decay=hp["weight_decay"])
+            if fused:
+                p2, m2 = kblk.signgd_fused_block(p, m, g, lr, **args, **kw)
+            else:
+                p2, m2 = kref.signgd_fused_ref(p, m, g, lr=lr, **args)
+            return p2, m2, None, None
+        if fam == "sgd":
+            args = dict(momentum=hp.get("momentum", 0.0))
+            if fused:
+                p2, m2 = kblk.sgd_fused_block(p, m, g, lr, **args, **kw)
+            else:
+                p2, m2 = kref.sgd_fused_ref(p, m, g, lr=lr, **args)
+            return p2, m2, None, None
+        raise ValueError(self.family)
+
+    # -- Hessian-EMA refresh (Algorithm 3 line 9) ---------------------------
+
+    def update_hessian(self, state: EngineState, est: PyTree, *,
+                       scale=1.0, params: PyTree) -> EngineState:
+        """Fold a fresh diagonal-Hessian estimate into the curvature shards.
+
+        ``scale`` is the GNB batch factor B (a traced scalar — it depends on
+        the step's valid-token mask), folded into the EMA in-kernel so the
+        scaled estimate never materializes.  AdaHessian squares the scaled
+        estimate (its state is an EMA of squared estimates)."""
+        if not self.hessian_aware:
+            return state
+        lay = self.layout(params)
+        e_sh = ravel_shards(lay, est, dtype=jnp.float32)
+        beta2 = self.hypers["beta2"]
+        square = self.family == "adahessian"
+        new_h = []
+        for h, e in zip(state.h, e_sh):
+            if self.backend == "pallas":
+                new_h.append(kblk.hessian_ema_block(
+                    h, e, beta2=beta2, scale=scale, square=square,
+                    block=self.block, interpret=self._interp()))
+            else:
+                new_h.append(kref.hessian_ema_ref(h, e, beta2=beta2,
+                                                  scale=scale, square=square))
+        return state._replace(h=tuple(new_h),
+                              hess_count=state.hess_count + 1)
+
+    # -- debugging / telemetry views ---------------------------------------
+
+    def state_as_trees(self, state: EngineState, params: PyTree) -> dict:
+        """Unravel m/h back into params-shaped pytrees (inspection only)."""
+        lay = self.layout(params)
+        out = {"m": unravel_shards(lay, state.m)}
+        if state.h:
+            out["h"] = unravel_shards(lay, state.h)
+        return out
+
+
+def engine_partition_specs(opt_state: EngineState, mesh=None) -> EngineState:
+    """PartitionSpecs for an EngineState: flat shards are sharded over the
+    ``data`` mesh axis when divisible (FSDP-style), else replicated."""
+    from jax.sharding import PartitionSpec as P
+    scalar = P()
+
+    def spec(a):
+        if (mesh is not None and "data" in mesh.shape
+                and a.shape[0] % mesh.shape["data"] == 0):
+            return P("data")
+        return P()
+
+    return EngineState(count=scalar, m=tuple(spec(a) for a in opt_state.m),
+                       h=tuple(spec(a) for a in opt_state.h),
+                       hess_count=scalar, clip_fraction=scalar)

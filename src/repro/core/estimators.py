@@ -55,6 +55,44 @@ def sample_labels(logits: jnp.ndarray, rng: jax.Array) -> jnp.ndarray:
     return jax.random.categorical(rng, logits, axis=-1)
 
 
+def gnb_estimator_sq(
+    logits_fn: Callable[[PyTree], jnp.ndarray],
+    params: PyTree,
+    rng: jax.Array,
+    *,
+    mask: jnp.ndarray | None = None,
+) -> Tuple[PyTree, jnp.ndarray]:
+    """GNB pieces: ``(ghat (*) ghat, B)`` with the batch scale unfolded.
+
+    The optimizer engine folds ``B`` into the Hessian-EMA kernel
+    (h' = b2 h + (1-b2) B ghat^2), so ``B * ghat^2`` never materializes as a
+    separate buffer.  ``B`` is traced when ``mask`` is given (it counts the
+    step's valid positions)."""
+
+    def sampled_loss(p) -> jnp.ndarray:
+        logits = logits_fn(p)
+        yhat = sample_labels(jax.lax.stop_gradient(logits), rng)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, yhat[..., None], axis=-1)[..., 0]
+        if mask is not None:
+            nll = nll * mask
+            return nll.sum() / jnp.maximum(mask.sum(), 1)
+        return nll.mean()
+
+    if mask is not None:
+        batch_size = jnp.maximum(mask.sum(), 1).astype(jnp.float32)
+    else:
+        shape = jax.eval_shape(logits_fn, params).shape
+        batch_size = 1
+        for s in shape[:-1]:
+            batch_size *= s
+        batch_size = jnp.asarray(batch_size, jnp.float32)
+    ghat = jax.grad(sampled_loss)(params)
+    sq = jax.tree.map(
+        lambda g: g.astype(jnp.float32) * g.astype(jnp.float32), ghat)
+    return sq, batch_size
+
+
 def gnb_estimator(
     logits_fn: Callable[[PyTree], jnp.ndarray],
     params: PyTree,
@@ -74,28 +112,8 @@ def gnb_estimator(
     Returns ``B * ghat (*) ghat`` (element-wise square) where ``ghat`` is the
     gradient of the mean CE against *sampled* labels.
     """
-
-    def sampled_loss(p) -> jnp.ndarray:
-        logits = logits_fn(p)
-        yhat = sample_labels(jax.lax.stop_gradient(logits), rng)
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        nll = -jnp.take_along_axis(logp, yhat[..., None], axis=-1)[..., 0]
-        if mask is not None:
-            nll = nll * mask
-            return nll.sum() / jnp.maximum(mask.sum(), 1)
-        return nll.mean()
-
-    if mask is not None:
-        batch_size = jnp.maximum(mask.sum(), 1)
-    else:
-        shape = jax.eval_shape(logits_fn, params).shape
-        batch_size = 1
-        for s in shape[:-1]:
-            batch_size *= s
-    ghat = jax.grad(sampled_loss)(params)
-    return jax.tree.map(
-        lambda g: (batch_size * g.astype(jnp.float32) * g.astype(jnp.float32)),
-        ghat)
+    sq, batch_size = gnb_estimator_sq(logits_fn, params, rng, mask=mask)
+    return jax.tree.map(lambda s: batch_size * s, sq)
 
 
 def empirical_fisher_estimator(

@@ -1,4 +1,8 @@
 # TPU hot-spot kernels for the paper's contribution: the fused Sophia
-# optimizer step (pl.pallas_call + BlockSpec VMEM tiling).  ops.py = jit'd
-# wrappers, ref.py = pure-jnp oracles, sophia_update.py = the kernels.
-from . import ops, ref
+# optimizer step (pl.pallas_call + BlockSpec VMEM tiling).
+#   sophia_update.py = the kernels (flat-shard granularity, all families)
+#   ref.py           = pure-jnp oracles (the engine's reference backend)
+#   ops.py           = per-tensor wrappers for kernel unit tests
+# The production entry point is core/engine.py, which drives the kernels
+# over dtype-homogeneous flat shards (one pallas_call grid sweep per shard).
+from . import ops, ref, sophia_update

@@ -1,10 +1,14 @@
-"""Public jit'd wrappers: whole-pytree fused optimizer application.
+"""Per-pytree wrappers around the fused kernels (test/bench harness).
 
 Each leaf is flattened, zero-padded to the block size, streamed through the
 Pallas kernel, and reshaped back.  Padding is benign for every fused op
-(p=m=h=g=0 stays 0; clip counts on padding are masked out).  Element-wise
-ops compose with any sharding: jit partitions the flat arrays the same way
-as the parameters.
+(p=m=h=g=0 stays 0; clip counts on padding are masked out).
+
+NOTE: the production train step does NOT go through these wrappers — the
+per-leaf pad/unpad round-trip here is exactly what the flat-buffer engine
+(core/engine.py) eliminates by raveling the whole tree into block-padded
+dtype shards once at init.  These remain as the direct per-tensor harness
+for kernel unit tests (tests/test_kernels.py) and micro-benchmarks.
 """
 from __future__ import annotations
 

@@ -28,10 +28,17 @@ def sophia_fused_ref(p, m, h, g, *, lr, beta1, gamma, eps, weight_decay,
     return p_new.astype(p.dtype), m_new.astype(m.dtype), n_clipped
 
 
-def hessian_ema_ref(h, hhat, *, beta2):
-    """h' = beta2 h + (1-beta2) hhat  (Algorithm 3 line 9)."""
+def hessian_ema_ref(h, hhat, *, beta2, scale=1.0, square=False):
+    """h' = beta2 h + (1-beta2) scale hhat  (Algorithm 3 line 9).
+
+    ``scale`` folds the GNB batch factor B in (Algorithm 2 line 6);
+    ``square=True`` gives the AdaHessian variant h' = b2 h + (1-b2)(s hhat)^2.
+    """
     f32 = jnp.float32
-    out = beta2 * h.astype(f32) + (1.0 - beta2) * hhat.astype(f32)
+    e = jnp.asarray(scale, f32) * hhat.astype(f32)
+    if square:
+        e = jnp.square(e)
+    out = beta2 * h.astype(f32) + (1.0 - beta2) * e
     return out.astype(h.dtype)
 
 
@@ -69,3 +76,41 @@ def adamw_fused_ref(p, m, v, g, *, lr, beta1, beta2, eps, weight_decay,
     u = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
     p_new = p.astype(f32) * (1.0 - lr * weight_decay) - lr * u
     return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+
+def lion_fused_ref(p, m, g, *, lr, beta1, beta2, weight_decay):
+    """Lion step: sign of the (b1) interpolation, momentum EMA'd with b2."""
+    f32 = jnp.float32
+    g32 = g.astype(f32)
+    u = jnp.sign(beta1 * m.astype(f32) + (1.0 - beta1) * g32)
+    p_new = p.astype(f32) * (1.0 - lr * weight_decay) - lr * u
+    m_new = beta2 * m.astype(f32) + (1.0 - beta2) * g32
+    return p_new.astype(p.dtype), m_new.astype(m.dtype)
+
+
+def signgd_fused_ref(p, m, g, *, lr, beta1, weight_decay):
+    """Momentum SignSGD (the paper's 'Clip' ablation)."""
+    f32 = jnp.float32
+    m_new = beta1 * m.astype(f32) + (1.0 - beta1) * g.astype(f32)
+    p_new = p.astype(f32) * (1.0 - lr * weight_decay) - lr * jnp.sign(m_new)
+    return p_new.astype(p.dtype), m_new.astype(m.dtype)
+
+
+def sgd_fused_ref(p, m, g, *, lr, momentum):
+    f32 = jnp.float32
+    m_new = momentum * m.astype(f32) + g.astype(f32)
+    p_new = p.astype(f32) - lr * m_new
+    return p_new.astype(p.dtype), m_new.astype(m.dtype)
+
+
+def adahessian_fused_ref(p, m, v, g, *, lr, beta1, beta2, eps, weight_decay,
+                         step):
+    """AdaHessian step: Adam-shaped update, v refreshed out-of-band from
+    squared Hessian estimates (see hessian_ema_ref(square=True))."""
+    f32 = jnp.float32
+    m_new = beta1 * m.astype(f32) + (1.0 - beta1) * g.astype(f32)
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    u = (m_new / bc1) / (jnp.sqrt(v.astype(f32) / bc2) + eps)
+    p_new = p.astype(f32) * (1.0 - lr * weight_decay) - lr * u
+    return p_new.astype(p.dtype), m_new.astype(m.dtype)

@@ -1,16 +1,23 @@
-"""Fused Sophia-step Pallas TPU kernels.
+"""Fused optimizer-step Pallas TPU kernels (flat-shard granularity).
 
-Why a kernel: the optimizer update is element-wise over every parameter —
+Why kernels: the optimizer update is element-wise over every parameter —
 pure HBM-bandwidth work.  Unfused, XLA materializes m', raw-update, clipped
 update, decayed params as separate buffers: ~6 reads + ~4 writes per element.
-The fused kernel reads (p, m, h, g) once and writes (p', m') once — the
+Each fused kernel reads its operands once and writes its outputs once — the
 bandwidth floor — and streams VMEM blocks of 128k elements (512 KiB fp32
 per operand; 4 in + 2 out = 3 MiB live, well under the ~16 MiB v5e VMEM
 budget).  Blocks are 1-D and lane-aligned (128k = 1024 x 128).
 
+The engine (core/engine.py) calls these on whole dtype-homogeneous flat
+shards whose length is a multiple of ``block`` (tail-padded once at init),
+so one ``pallas_call`` grid sweep covers the entire parameter set.  All
+kernels compute in fp32 and preserve input dtypes on write, so bf16
+optimizer state (``state_dtype="bfloat16"`` at 400B scale) streams half the
+bytes without a separate cast pass.
+
 Validated under ``interpret=True`` on CPU against kernels/ref.py across a
-shape x dtype sweep (tests/test_kernels.py); on a real TPU the same
-pallas_call compiles natively.
+shape x dtype sweep (tests/test_kernels.py, tests/test_engine.py); on a real
+TPU the same pallas_call compiles natively.
 """
 from __future__ import annotations
 
@@ -22,96 +29,237 @@ from jax.experimental import pallas as pl
 
 BLOCK = 128 * 1024  # elements per VMEM block (fp32: 512 KiB per operand)
 
+_f32 = jnp.float32
+
+
+def _grid_spec(block):
+    return pl.BlockSpec((block,), lambda i: (i,))
+
+
+def _scalar_spec(n):
+    return pl.BlockSpec((n,), lambda i: (0,))
+
+
+# ---------------------------------------------------------------------------
+# Sophia (Algorithm 3 lines 6, 12, 13) + Hessian EMA (line 9)
+
 
 def _sophia_kernel(lr_ref, p_ref, m_ref, h_ref, g_ref,
                    p_out, m_out, nclip_out, *,
                    beta1, gamma, eps, weight_decay, clip_threshold):
     lr = lr_ref[0]
-    m = beta1 * m_ref[...] + (1.0 - beta1) * g_ref[...]
-    raw = m / jnp.maximum(gamma * h_ref[...], eps)
+    m = beta1 * m_ref[...].astype(_f32) + (1.0 - beta1) * g_ref[...].astype(_f32)
+    raw = m / jnp.maximum(gamma * h_ref[...].astype(_f32), eps)
     u = jnp.clip(raw, -clip_threshold, clip_threshold)
-    p_out[...] = p_ref[...] * (1.0 - lr * weight_decay) - lr * u
-    m_out[...] = m
+    p_out[...] = (p_ref[...].astype(_f32) * (1.0 - lr * weight_decay)
+                  - lr * u).astype(p_out.dtype)
+    m_out[...] = m.astype(m_out.dtype)
     nclip_out[0] = jnp.sum((jnp.abs(raw) >= clip_threshold)
                            .astype(jnp.int32))
 
 
 def sophia_fused_block(p, m, h, g, lr, *, beta1, gamma, eps, weight_decay,
                        clip_threshold=1.0, block=BLOCK, interpret=True):
-    """Run the fused step on a flat fp32 array (length % block == 0)."""
+    """Run the fused step on flat arrays (length % block == 0).
+
+    Dtypes are preserved: p' matches p, m' matches m (compute is fp32)."""
     n = p.shape[0]
     grid = n // block
     kern = functools.partial(
         _sophia_kernel, beta1=beta1, gamma=gamma, eps=eps,
         weight_decay=weight_decay, clip_threshold=clip_threshold)
-    spec = pl.BlockSpec((block,), lambda i: (i,))
-    lr_spec = pl.BlockSpec((1,), lambda i: (0,))
+    spec = _grid_spec(block)
     return pl.pallas_call(
         kern,
         grid=(grid,),
-        in_specs=[lr_spec, spec, spec, spec, spec],
+        in_specs=[_scalar_spec(1), spec, spec, spec, spec],
         out_specs=[spec, spec, pl.BlockSpec((1,), lambda i: (i,))],
-        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32),
-                   jax.ShapeDtypeStruct((n,), jnp.float32),
+        out_shape=[jax.ShapeDtypeStruct((n,), p.dtype),
+                   jax.ShapeDtypeStruct((n,), m.dtype),
                    jax.ShapeDtypeStruct((grid,), jnp.int32)],
         interpret=interpret,
-    )(lr.reshape(1).astype(jnp.float32), p, m, h, g)
+    )(jnp.asarray(lr, _f32).reshape(1), p, m, h, g)
 
 
-def _hess_ema_kernel(h_ref, e_ref, h_out, *, beta2, scale):
-    h_out[...] = beta2 * h_ref[...] + (1.0 - beta2) * scale * e_ref[...]
+def _hess_ema_kernel(sc_ref, h_ref, e_ref, h_out, *, beta2, square):
+    e = sc_ref[0] * e_ref[...].astype(_f32)
+    if square:
+        e = e * e
+    h_out[...] = (beta2 * h_ref[...].astype(_f32)
+                  + (1.0 - beta2) * e).astype(h_out.dtype)
 
 
-def hessian_ema_block(h, est, *, beta2, scale=1.0, block=BLOCK,
+def hessian_ema_block(h, est, *, beta2, scale=1.0, square=False, block=BLOCK,
                       interpret=True):
-    """h' = beta2 h + (1-beta2) * scale * est on a flat fp32 array.
+    """h' = beta2 h + (1-beta2) * scale * est on a flat array.
 
     ``scale`` folds the GNB batch factor B in (Algorithm 2 line 6) so the
-    squared-gradient estimate never materializes separately.
+    squared-gradient estimate never materializes separately; it is a traced
+    scalar (B depends on the step's valid-token mask).  ``square=True`` is
+    the AdaHessian refresh: h' = b2 h + (1-b2) (scale * est)^2.
     """
     n = h.shape[0]
     grid = n // block
-    kern = functools.partial(_hess_ema_kernel, beta2=beta2, scale=scale)
-    spec = pl.BlockSpec((block,), lambda i: (i,))
+    kern = functools.partial(_hess_ema_kernel, beta2=beta2, square=square)
+    spec = _grid_spec(block)
     return pl.pallas_call(
         kern,
         grid=(grid,),
-        in_specs=[spec, spec],
+        in_specs=[_scalar_spec(1), spec, spec],
         out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n,), h.dtype),
         interpret=interpret,
-    )(h, est)
+    )(jnp.asarray(scale, _f32).reshape(1), h, est)
+
+
+# ---------------------------------------------------------------------------
+# Baselines (the paper's Table 1 comparison runs through identical machinery)
 
 
 def _adamw_kernel(sc_ref, p_ref, m_ref, v_ref, g_ref, p_out, m_out, v_out, *,
                   beta1, beta2, eps, weight_decay):
     lr, bc1, bc2 = sc_ref[0], sc_ref[1], sc_ref[2]
-    g = g_ref[...]
-    m = beta1 * m_ref[...] + (1.0 - beta1) * g
-    v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    g = g_ref[...].astype(_f32)
+    m = beta1 * m_ref[...].astype(_f32) + (1.0 - beta1) * g
+    v = beta2 * v_ref[...].astype(_f32) + (1.0 - beta2) * g * g
     u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
-    p_out[...] = p_ref[...] * (1.0 - lr * weight_decay) - lr * u
-    m_out[...] = m
-    v_out[...] = v
+    p_out[...] = (p_ref[...].astype(_f32) * (1.0 - lr * weight_decay)
+                  - lr * u).astype(p_out.dtype)
+    m_out[...] = m.astype(m_out.dtype)
+    v_out[...] = v.astype(v_out.dtype)
 
 
 def adamw_fused_block(p, m, v, g, lr, step, *, beta1, beta2, eps,
                       weight_decay, block=BLOCK, interpret=True):
-    """Fused AdamW on a flat fp32 array (baseline parity for Table 1)."""
+    """Fused AdamW on flat arrays (baseline parity for Table 1)."""
     n = p.shape[0]
     grid = n // block
-    bc1 = 1.0 - beta1 ** step.astype(jnp.float32)
-    bc2 = 1.0 - beta2 ** step.astype(jnp.float32)
-    scalars = jnp.stack([lr.astype(jnp.float32), bc1, bc2])
+    step = jnp.asarray(step, _f32)
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    scalars = jnp.stack([jnp.asarray(lr, _f32), bc1, bc2])
     kern = functools.partial(_adamw_kernel, beta1=beta1, beta2=beta2,
                              eps=eps, weight_decay=weight_decay)
-    spec = pl.BlockSpec((block,), lambda i: (i,))
-    sc_spec = pl.BlockSpec((3,), lambda i: (0,))
+    spec = _grid_spec(block)
     return pl.pallas_call(
         kern,
         grid=(grid,),
-        in_specs=[sc_spec, spec, spec, spec, spec],
+        in_specs=[_scalar_spec(3), spec, spec, spec, spec],
         out_specs=[spec, spec, spec],
-        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 3,
+        out_shape=[jax.ShapeDtypeStruct((n,), p.dtype),
+                   jax.ShapeDtypeStruct((n,), m.dtype),
+                   jax.ShapeDtypeStruct((n,), v.dtype)],
         interpret=interpret,
     )(scalars, p, m, v, g)
+
+
+def _adahessian_kernel(sc_ref, p_ref, m_ref, v_ref, g_ref, p_out, m_out, *,
+                       beta1, beta2, eps, weight_decay):
+    lr, bc1, bc2 = sc_ref[0], sc_ref[1], sc_ref[2]
+    m = beta1 * m_ref[...].astype(_f32) + (1.0 - beta1) * g_ref[...].astype(_f32)
+    u = (m / bc1) / (jnp.sqrt(v_ref[...].astype(_f32) / bc2) + eps)
+    p_out[...] = (p_ref[...].astype(_f32) * (1.0 - lr * weight_decay)
+                  - lr * u).astype(p_out.dtype)
+    m_out[...] = m.astype(m_out.dtype)
+
+
+def adahessian_fused_block(p, m, v, g, lr, step, *, beta1, beta2, eps,
+                           weight_decay, block=BLOCK, interpret=True):
+    """AdaHessian step: Adam-shaped, v read-only (refreshed out-of-band)."""
+    n = p.shape[0]
+    grid = n // block
+    step = jnp.asarray(step, _f32)
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    scalars = jnp.stack([jnp.asarray(lr, _f32), bc1, bc2])
+    kern = functools.partial(_adahessian_kernel, beta1=beta1, beta2=beta2,
+                             eps=eps, weight_decay=weight_decay)
+    spec = _grid_spec(block)
+    return pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[_scalar_spec(3), spec, spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((n,), p.dtype),
+                   jax.ShapeDtypeStruct((n,), m.dtype)],
+        interpret=interpret,
+    )(scalars, p, m, v, g)
+
+
+def _lion_kernel(lr_ref, p_ref, m_ref, g_ref, p_out, m_out, *,
+                 beta1, beta2, weight_decay):
+    lr = lr_ref[0]
+    g = g_ref[...].astype(_f32)
+    m = m_ref[...].astype(_f32)
+    u = jnp.sign(beta1 * m + (1.0 - beta1) * g)
+    p_out[...] = (p_ref[...].astype(_f32) * (1.0 - lr * weight_decay)
+                  - lr * u).astype(p_out.dtype)
+    m_out[...] = (beta2 * m + (1.0 - beta2) * g).astype(m_out.dtype)
+
+
+def lion_fused_block(p, m, g, lr, *, beta1, beta2, weight_decay, block=BLOCK,
+                     interpret=True):
+    n = p.shape[0]
+    grid = n // block
+    kern = functools.partial(_lion_kernel, beta1=beta1, beta2=beta2,
+                             weight_decay=weight_decay)
+    spec = _grid_spec(block)
+    return pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[_scalar_spec(1), spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((n,), p.dtype),
+                   jax.ShapeDtypeStruct((n,), m.dtype)],
+        interpret=interpret,
+    )(jnp.asarray(lr, _f32).reshape(1), p, m, g)
+
+
+def _signgd_kernel(lr_ref, p_ref, m_ref, g_ref, p_out, m_out, *,
+                   beta1, weight_decay):
+    lr = lr_ref[0]
+    m = beta1 * m_ref[...].astype(_f32) + (1.0 - beta1) * g_ref[...].astype(_f32)
+    p_out[...] = (p_ref[...].astype(_f32) * (1.0 - lr * weight_decay)
+                  - lr * jnp.sign(m)).astype(p_out.dtype)
+    m_out[...] = m.astype(m_out.dtype)
+
+
+def signgd_fused_block(p, m, g, lr, *, beta1, weight_decay, block=BLOCK,
+                       interpret=True):
+    n = p.shape[0]
+    grid = n // block
+    kern = functools.partial(_signgd_kernel, beta1=beta1,
+                             weight_decay=weight_decay)
+    spec = _grid_spec(block)
+    return pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[_scalar_spec(1), spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((n,), p.dtype),
+                   jax.ShapeDtypeStruct((n,), m.dtype)],
+        interpret=interpret,
+    )(jnp.asarray(lr, _f32).reshape(1), p, m, g)
+
+
+def _sgd_kernel(lr_ref, p_ref, m_ref, g_ref, p_out, m_out, *, momentum):
+    lr = lr_ref[0]
+    m = momentum * m_ref[...].astype(_f32) + g_ref[...].astype(_f32)
+    p_out[...] = (p_ref[...].astype(_f32) - lr * m).astype(p_out.dtype)
+    m_out[...] = m.astype(m_out.dtype)
+
+
+def sgd_fused_block(p, m, g, lr, *, momentum, block=BLOCK, interpret=True):
+    n = p.shape[0]
+    grid = n // block
+    kern = functools.partial(_sgd_kernel, momentum=momentum)
+    spec = _grid_spec(block)
+    return pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[_scalar_spec(1), spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((n,), p.dtype),
+                   jax.ShapeDtypeStruct((n,), m.dtype)],
+        interpret=interpret,
+    )(jnp.asarray(lr, _f32).reshape(1), p, m, g)

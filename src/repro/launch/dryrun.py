@@ -27,9 +27,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..configs import ARCHS, ASSIGNED, get_config, input_specs
 from ..configs.shapes import SHAPES, applicable
-from ..core.baselines import AdamWState
-from ..core.clipping import ClipState
-from ..core.sophia import SophiaState
+from ..core.engine import EngineState, engine_partition_specs
 from ..distributed.sharding import (batch_specs, cache_specs,
                                     partition_params, set_activation_mesh,
                                     to_shardings)
@@ -42,21 +40,25 @@ from .roofline import (dominant_term, model_flops_infer, model_flops_train,
                        roofline_terms)
 
 
-def state_partition_specs(state_shape: TrainState, pspecs) -> TrainState:
-    """PartitionSpecs for a TrainState: optimizer m/h/v mirror params."""
+def state_partition_specs(state_shape: TrainState, pspecs,
+                          mesh=None) -> TrainState:
+    """PartitionSpecs for a TrainState.
+
+    The engine's flat optimizer shards are 1-D and block-padded, so with a
+    ``mesh`` they shard over the ``data`` axis (FSDP-style) whenever the
+    size divides; without a mesh they replicate."""
     scalar = P()
     opt = state_shape.opt_state
-    if isinstance(opt, SophiaState):
-        opt_specs = SophiaState(count=scalar, m=pspecs, h=pspecs,
-                                hess_count=scalar, clip_fraction=scalar)
-    elif isinstance(opt, AdamWState):
-        opt_specs = AdamWState(count=scalar, m=pspecs, v=pspecs)
-    else:  # generic: any params-shaped subtree mirrors pspecs
+    if isinstance(opt, EngineState):
+        opt_specs = engine_partition_specs(opt, mesh)
+    else:  # generic: scalar-replicate unknown optimizer state
         opt_specs = jax.tree.map(lambda _: scalar, opt)
     return TrainState(step=scalar, params=pspecs, opt_state=opt_specs,
                       clip_state=jax.tree.map(lambda _: scalar,
                                               state_shape.clip_state),
-                      rng=scalar)
+                      rng=scalar,
+                      comp_state=jax.tree.map(lambda _: scalar,
+                                              state_shape.comp_state))
 
 
 def _ns(mesh, spec_tree):
@@ -93,7 +95,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, opt: str = "sophia_g",
         init_fn, train_step, _hess = make_train_fns(cfg, tc)
         state_shape = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
         pspecs = partition_params(state_shape.params, mesh, fsdp=fsdp)
-        sspecs = state_partition_specs(state_shape, pspecs)
+        sspecs = state_partition_specs(state_shape, pspecs, mesh)
         bspecs = batch_specs(cell.specs["batch"], mesh)
         jf = jax.jit(train_step,
                      in_shardings=(_ns(mesh, sspecs), _ns(mesh, bspecs)),

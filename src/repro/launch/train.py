@@ -25,7 +25,8 @@ from ..configs import ARCHS, get_config
 from ..data import DataConfig, make_source
 from ..distributed.sharding import (batch_specs, partition_params,
                                     set_activation_mesh)
-from ..train import TrainerConfig, checkpoint as ckpt, make_train_fns
+from ..train import TrainerConfig, checkpoint as ckpt, make_engine, \
+    make_train_fns
 from ..train.elastic import PreemptionGuard, StragglerDetector
 from .mesh import make_mesh
 
@@ -41,6 +42,14 @@ def build_mesh():
             model = m
             break
     return make_mesh((n // model, model), ("data", "model"))
+
+
+def _final_save(ckpt_dir, step, state, extra):
+    """Sync save at exit; skips if the periodic async save already wrote this
+    step (and drains it first — the tmp dir would otherwise be shared)."""
+    ckpt.wait_for_pending()
+    if ckpt.latest_step(ckpt_dir) != step:
+        ckpt.save(ckpt_dir, step, state, extra=extra)
 
 
 def main(argv=None):
@@ -61,6 +70,8 @@ def main(argv=None):
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--remat", default="none")
     ap.add_argument("--fused-kernel", action="store_true")
+    ap.add_argument("--state-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=10)
@@ -76,7 +87,8 @@ def main(argv=None):
         weight_decay=args.weight_decay, gamma=args.gamma,
         hess_interval=args.hess_interval, hess_subbatch=args.hess_subbatch,
         grad_accum=args.grad_accum, remat=args.remat,
-        fused_kernel=args.fused_kernel, seed=args.seed)
+        fused_kernel=args.fused_kernel, state_dtype=args.state_dtype,
+        seed=args.seed)
     src = make_source(DataConfig(
         seq_len=args.seq_len, global_batch=args.global_batch,
         vocab_size=cfg.vocab_size, seed=args.seed, source=args.data,
@@ -89,7 +101,7 @@ def main(argv=None):
         state = init_fn(jax.random.PRNGKey(args.seed))
         pspecs = partition_params(state.params, mesh, fsdp=True)
         from .dryrun import state_partition_specs
-        sspecs = state_partition_specs(state, pspecs)
+        sspecs = state_partition_specs(state, pspecs, mesh)
         ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
                                     is_leaf=lambda x: isinstance(x, P))
         state = jax.device_put(state, ns(sspecs))
@@ -104,8 +116,23 @@ def main(argv=None):
         train_step = jax.jit(train_step)
         hess_step = jax.jit(hess_step)
 
+    # flat-shard layout recorded alongside every checkpoint (restore sanity
+    # check + elastic tooling can rebuild the unravel spec without the code)
+    layout_meta = dict(make_engine(tc).describe(state.params),
+                       optimizer=args.opt, state_dtype=args.state_dtype)
+
     start = 0
     if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        prev = (ckpt.read_manifest(args.ckpt_dir).get("extra") or {})
+        for field in ("optimizer", "state_dtype"):
+            # different optimizer families (and state dtypes) share the flat
+            # (m, h) layout, so a silent restore would reinterpret the
+            # curvature state — refuse instead
+            if prev.get(field) not in (None, layout_meta[field]):
+                raise SystemExit(
+                    f"[resume] checkpoint in {args.ckpt_dir} was written "
+                    f"with {field}={prev[field]!r}; refusing to resume with "
+                    f"{layout_meta[field]!r} (use a fresh --ckpt-dir)")
         like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                             state)
         state, start = ckpt.restore(args.ckpt_dir, like)
@@ -131,15 +158,15 @@ def main(argv=None):
                   f"gnorm {float(metrics['grad_norm']):.3f} {dt * 1e3:.0f}ms",
                   flush=True)
         if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
-            ckpt.save(args.ckpt_dir, t + 1, state, async_=True)
+            ckpt.save(args.ckpt_dir, t + 1, state, async_=True,
+                      extra=layout_meta)
         if guard.requested:
             print(f"[preempt] checkpointing at step {t + 1} and exiting")
             if args.ckpt_dir:
-                ckpt.save(args.ckpt_dir, t + 1, state)
+                _final_save(args.ckpt_dir, t + 1, state, layout_meta)
             return state
     if args.ckpt_dir:
-        ckpt.save(args.ckpt_dir, args.steps, state)
-        ckpt.wait_for_pending()
+        _final_save(args.ckpt_dir, args.steps, state, layout_meta)
     print(f"done: {args.steps - start} steps in {time.time() - t_start:.1f}s "
           f"(straggler flags: {straggler.flagged})")
     return state

@@ -1,4 +1,4 @@
 from .train_state import TrainState
-from .trainer import (TrainerConfig, make_optimizer, make_schedule,
+from .trainer import (TrainerConfig, make_engine, make_schedule,
                       make_train_fns, train_loop)
 from . import checkpoint, elastic

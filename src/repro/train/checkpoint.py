@@ -47,7 +47,7 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def _write(tree_np, step: int, ckpt_dir: str):
+def _write(tree_np, step: int, ckpt_dir: str, extra: Optional[dict] = None):
     tmp = os.path.join(ckpt_dir, f".tmp-step_{step:08d}")
     final = _step_dir(ckpt_dir, step)
     if os.path.exists(tmp):
@@ -63,6 +63,10 @@ def _write(tree_np, step: int, ckpt_dir: str):
         "shapes": [list(np.shape(l)) for l in leaves],
         "dtypes": [str(np.asarray(l).dtype) for l in leaves],
     }
+    if extra:
+        # e.g. the optimizer engine's flat-shard layout (block size, shard
+        # dtypes/sizes) so tooling can interpret the flat leaves offline
+        manifest["extra"] = extra
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -74,18 +78,32 @@ _pending: list = []
 
 
 def save(ckpt_dir: str, step: int, state: PyTree, *, async_: bool = False,
-         keep: int = 3) -> None:
-    """Snapshot ``state`` (device -> host) and persist it."""
+         keep: int = 3, extra: Optional[dict] = None) -> None:
+    """Snapshot ``state`` (device -> host) and persist it.
+
+    ``extra`` is a JSON-serializable dict stored in the manifest (the
+    launcher records the engine's flat-shard layout here)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     tree_np = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
     if async_:
-        t = threading.Thread(target=_write, args=(tree_np, step, ckpt_dir),
+        t = threading.Thread(target=_write,
+                             args=(tree_np, step, ckpt_dir, extra),
                              daemon=True)
         t.start()
         _pending.append(t)
     else:
-        _write(tree_np, step, ckpt_dir)
+        _write(tree_np, step, ckpt_dir, extra)
     _gc(ckpt_dir, keep)
+
+
+def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> dict:
+    """Load a checkpoint's manifest (layout metadata lives under 'extra')."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    with open(os.path.join(_step_dir(ckpt_dir, step), _MANIFEST)) as f:
+        return json.load(f)
 
 
 def wait_for_pending() -> None:

@@ -12,6 +12,7 @@ PyTree = Any
 class TrainState(NamedTuple):
     step: jnp.ndarray          # int32 scalar
     params: PyTree
-    opt_state: PyTree
+    opt_state: PyTree          # EngineState: flat dtype-homogeneous shards
     clip_state: PyTree         # global-norm clip telemetry (paper Fig 7a)
     rng: jax.Array             # folded per step for estimator sampling
+    comp_state: PyTree = ()    # grad-compression error feedback (if enabled)

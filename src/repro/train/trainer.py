@@ -9,24 +9,28 @@ The host alternates:
 keeping the hot step's HLO free of estimator code (clean rooflines, and the
 levanter-style production structure).  Both steps share:
   grad accumulation (microbatch scan) -> global-norm clip (threshold 1.0,
-  trigger telemetry) -> [optional int8 compression roundtrip] -> optimizer
-  update -> [optional fused Pallas apply].
+  trigger telemetry) -> [optional int8 compression roundtrip with persistent
+  error feedback] -> flat-buffer optimizer engine step.
+
+The optimizer update itself is one ``engine.step(state, grads, lr)`` call
+for *every* optimizer: the engine (core/engine.py) keeps m/h as flat
+dtype-homogeneous shards and executes the whole update as a single fused
+Pallas grid sweep per shard (``fused_kernel=True``) or the identical-layout
+pure-jnp reference.  The LR schedule is evaluated once per step and handed
+to the engine as a traced scalar.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..core import (OPTIMIZERS, apply_updates, clip_by_global_norm,
-                    empirical_fisher_estimator, global_norm, gnb_estimator,
+from ..core import (OptimizerEngine, clip_by_global_norm,
+                    empirical_fisher_estimator, gnb_estimator_sq,
                     hutchinson_estimator, linear_warmup_cosine, constant,
                     subsample_batch)
-from ..core.sophia import SophiaState
-from ..core.types import HessianAwareTransformation
 from ..distributed.compression import GradCompressor
 from ..models import ModelConfig, get_model
 from .train_state import TrainState
@@ -54,9 +58,9 @@ class TrainerConfig:
     grad_accum: int = 1
     remat: str = "none"                # none | full | dots
     attn_impl: str = "auto"
-    fused_kernel: bool = False         # Pallas fused Sophia apply
+    fused_kernel: bool = False         # Pallas backend for the engine
     compress_grads: bool = False       # int8 + error feedback (beyond-paper)
-    state_dtype: str = "float32"       # Sophia m/h dtype ("bfloat16" at 400B)
+    state_dtype: str = "float32"       # optimizer m/h dtype ("bfloat16" at 400B)
     seed: int = 0
 
 
@@ -66,27 +70,32 @@ def make_schedule(tc: TrainerConfig):
     return linear_warmup_cosine(tc.peak_lr, tc.total_steps, tc.warmup_steps)
 
 
-def make_optimizer(tc: TrainerConfig):
-    sched = make_schedule(tc)
+def make_engine(tc: TrainerConfig) -> OptimizerEngine:
+    """Engine for ``tc.optimizer`` with the paper's per-optimizer hypers."""
     name = tc.optimizer
     if name in ("sophia_g", "sophia_h"):
-        sdt = jnp.bfloat16 if tc.state_dtype == "bfloat16" else jnp.float32
-        return OPTIMIZERS[name](sched, beta1=tc.beta1, beta2=tc.beta2,
-                                gamma=tc.gamma, eps=tc.eps,
-                                weight_decay=tc.weight_decay,
-                                clip_threshold=tc.clip_threshold,
-                                state_dtype=sdt)
-    if name == "adamw":
-        return OPTIMIZERS[name](sched, beta1=0.9, beta2=0.95,
-                                weight_decay=tc.weight_decay)
-    if name == "lion":
-        return OPTIMIZERS[name](sched, weight_decay=tc.weight_decay)
-    if name == "adahessian":
-        return OPTIMIZERS[name](sched, weight_decay=tc.weight_decay)
-    if name == "signgd":
-        return OPTIMIZERS[name](sched, beta1=tc.beta1,
-                                weight_decay=tc.weight_decay)
-    return OPTIMIZERS[name](sched)
+        hypers = dict(beta1=tc.beta1, beta2=tc.beta2, gamma=tc.gamma,
+                      eps=tc.eps, weight_decay=tc.weight_decay,
+                      clip_threshold=tc.clip_threshold)
+    elif name == "adamw":
+        hypers = dict(beta1=0.9, beta2=0.95, eps=1e-8,
+                      weight_decay=tc.weight_decay)
+    elif name == "lion":
+        hypers = dict(beta1=0.95, beta2=0.98, weight_decay=tc.weight_decay)
+    elif name == "signgd":
+        hypers = dict(beta1=tc.beta1, weight_decay=tc.weight_decay)
+    elif name == "adahessian":
+        hypers = dict(beta1=0.92, beta2=0.99, eps=1e-8,
+                      weight_decay=tc.weight_decay)
+    elif name == "sgd":
+        hypers = dict(momentum=0.0)
+    else:
+        raise ValueError(f"unknown optimizer {name!r}")
+    sdt = jnp.bfloat16 if tc.state_dtype == "bfloat16" else jnp.float32
+    return OptimizerEngine(name, hypers=hypers,
+                           backend="pallas" if tc.fused_kernel
+                           else "reference",
+                           state_dtype=sdt)
 
 
 # ---------------------------------------------------------------------------
@@ -122,11 +131,10 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
     All three are pure (jit-able with shardings by the launcher).
     """
     model = get_model(cfg)
-    optimizer = make_optimizer(tc)
+    engine = make_engine(tc)
+    schedule = make_schedule(tc)
     clipper = clip_by_global_norm(tc.grad_clip)
     compressor = GradCompressor() if tc.compress_grads else None
-    hessian_aware = isinstance(optimizer, HessianAwareTransformation) and \
-        optimizer.update_hessian is not None
 
     def loss_fn(params, batch):
         return model.loss_fn(cfg, params, batch, remat=tc.remat,
@@ -137,49 +145,29 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
                                         if rng is None else rng)
         params = model.init_params(cfg, p_rng)
         return TrainState(step=jnp.zeros((), jnp.int32), params=params,
-                          opt_state=optimizer.init(params),
-                          clip_state=clipper.init(params), rng=s_rng)
+                          opt_state=engine.init(params),
+                          clip_state=clipper.init(params), rng=s_rng,
+                          comp_state=(compressor.init(params)
+                                      if compressor is not None else ()))
 
     def _apply(state: TrainState, grads, metrics):
         grads, clip_state = clipper.update(grads, state.clip_state)
+        comp_state = state.comp_state
         if compressor is not None:
             crng = jax.random.fold_in(state.rng, state.step + (1 << 20))
-            # stateless roundtrip (error feedback handled by the caller's
-            # compression state when enabled end-to-end; here bias-free SR)
-            grads, _ = compressor.roundtrip(
-                grads, compressor.init(grads), crng)
-        if tc.fused_kernel and tc.optimizer in ("sophia_g", "sophia_h"):
-            from ..kernels import ops as kops
-            sched = make_schedule(tc)
-            lr = sched(state.opt_state.count)
-            params, m, clip_frac = kops.sophia_fused_apply(
-                state.params, state.opt_state.m, state.opt_state.h, grads,
-                lr=lr, beta1=tc.beta1, gamma=tc.gamma, eps=tc.eps,
-                weight_decay=tc.weight_decay)
-            opt_state = state.opt_state._replace(
-                count=state.opt_state.count + 1, m=m, clip_fraction=clip_frac)
-        elif tc.fused_kernel and tc.optimizer == "adamw":
-            from ..kernels import ops as kops
-            sched = make_schedule(tc)
-            lr = sched(state.opt_state.count)
-            params, m, v = kops.adamw_fused_apply(
-                state.params, state.opt_state.m, state.opt_state.v, grads,
-                lr=lr, step=state.opt_state.count + 1, beta1=0.9, beta2=0.95,
-                eps=1e-8, weight_decay=tc.weight_decay)
-            opt_state = state.opt_state._replace(
-                count=state.opt_state.count + 1, m=m, v=v)
-        else:
-            updates, opt_state = optimizer.update(grads, state.opt_state,
-                                                  state.params)
-            params = apply_updates(state.params, updates)
+            grads, comp_state = compressor.roundtrip(grads, comp_state, crng)
+        lr = schedule(state.opt_state.count)
+        params, opt_state = engine.step(state.opt_state, state.params,
+                                        grads, lr)
         metrics = dict(metrics,
                        grad_norm=clip_state.last_norm,
-                       clip_triggers=clip_state.triggers)
-        if isinstance(opt_state, SophiaState):
+                       clip_triggers=clip_state.triggers,
+                       lr=lr)
+        if engine.tracks_clip_fraction:
             metrics["sophia_clip_fraction"] = opt_state.clip_fraction
         return TrainState(step=state.step + 1, params=params,
                           opt_state=opt_state, clip_state=clip_state,
-                          rng=state.rng), metrics
+                          rng=state.rng, comp_state=comp_state), metrics
 
     def train_step(state: TrainState, batch):
         loss, metrics, grads = _accum_grads(loss_fn, state.params, batch,
@@ -188,6 +176,8 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
         return _apply(state, grads, metrics)
 
     def _estimate_hessian(params, batch, rng):
+        """Returns (estimate_tree, scale) — the engine folds ``scale`` into
+        the Hessian-EMA kernel (GNB's batch factor B, Algorithm 2 line 6)."""
         sub = subsample_batch(batch, tc.hess_subbatch) \
             if tc.hess_subbatch else batch
         if tc.estimator == "gnb":
@@ -195,12 +185,12 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
                 return model.logits_fn(cfg, p, sub, remat=tc.remat,
                                        attn_impl=tc.attn_impl)
             mask = sub.get("mask")
-            return gnb_estimator(lf, params, rng, mask=mask)
+            return gnb_estimator_sq(lf, params, rng, mask=mask)
         if tc.estimator == "hutchinson":
             def sf(p):
                 return model.loss_fn(cfg, p, sub, remat=tc.remat,
                                      attn_impl=tc.attn_impl)[0]
-            return hutchinson_estimator(sf, params, rng)
+            return hutchinson_estimator(sf, params, rng), 1.0
         if tc.estimator == "empirical_fisher":
             def sf(p):
                 return model.loss_fn(cfg, p, sub, remat=tc.remat,
@@ -208,15 +198,17 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
             n = jax.tree.leaves(sub)[0].shape[0] * \
                 (jax.tree.leaves(sub)[0].shape[1]
                  if jax.tree.leaves(sub)[0].ndim > 1 else 1)
-            return empirical_fisher_estimator(sf, params, n)
+            return empirical_fisher_estimator(sf, params, n), 1.0
         raise ValueError(tc.estimator)
 
     def train_step_hess(state: TrainState, batch):
         """Gradient step + Hessian-EMA refresh (Algorithm 3 lines 7-9)."""
         rng = jax.random.fold_in(state.rng, state.step)
-        if hessian_aware:
-            hhat = _estimate_hessian(state.params, batch, rng)
-            opt_state = optimizer.update_hessian(hhat, state.opt_state)
+        if engine.hessian_aware:
+            est, scale = _estimate_hessian(state.params, batch, rng)
+            opt_state = engine.update_hessian(state.opt_state, est,
+                                              scale=scale,
+                                              params=state.params)
             state = state._replace(opt_state=opt_state)
         return train_step(state, batch)
 

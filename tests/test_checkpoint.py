@@ -61,6 +61,7 @@ def test_restore_missing_raises(tmp_path):
         ckpt.restore(str(tmp_path), _state())
 
 
+@pytest.mark.slow
 def test_elastic_reshard_across_meshes(tmp_path):
     """Save under a (2,2) mesh, restore under (4,1) — in a subprocess with
     4 host devices (elastic re-scaling path)."""

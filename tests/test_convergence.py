@@ -7,6 +7,8 @@ import pytest
 from repro.core import apply_updates, exact_diag_hessian, sophia
 from repro.core.baselines import sgd, signgd
 
+pytestmark = pytest.mark.slow  # excluded from the fast tier-1 default
+
 
 def paper_toy_loss(theta):
     """Footnote 1: L1 sharp, L2 flat."""

@@ -24,6 +24,7 @@ def _batch_for(cfg, B=2, S=64, key=0):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_arch_smoke_forward_and_train_step(arch):
     """Instantiate the reduced config, one forward + one Sophia-G train

@@ -11,6 +11,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # excluded from the fast tier-1 default
+
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 

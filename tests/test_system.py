@@ -11,6 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # excluded from the fast tier-1 default
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

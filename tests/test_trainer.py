@@ -31,6 +31,7 @@ def test_hessian_refresh_every_k():
     assert int(state.step) == 11
 
 
+@pytest.mark.slow
 def test_all_optimizers_run():
     src = _src()
     for opt in ("sophia_g", "sophia_h", "adamw", "lion", "signgd",
@@ -98,6 +99,22 @@ def test_compressed_grads_still_train():
     assert hist[-1]["loss"] < hist[0]["loss"] + 0.1
 
 
+def test_error_feedback_state_persists():
+    """The quantization residual must accumulate across steps (it used to be
+    re-initialized every step, discarding error feedback)."""
+    src = _src()
+    tc = _tiny_tc(compress_grads=True, optimizer="adamw")
+    state, _ = train_loop(GPT2_TINY, tc, src, num_steps=2)
+    err = jax.flatten_util.ravel_pytree(state.comp_state.error)[0]
+    assert float(jnp.sum(jnp.abs(err))) > 0.0
+    # and it is part of the train state pytree (checkpointable)
+    state2, _ = train_loop(GPT2_TINY, tc, src, num_steps=1, state=state,
+                           start_step=2)
+    err2 = jax.flatten_util.ravel_pytree(state2.comp_state.error)[0]
+    assert not np.allclose(np.asarray(err), np.asarray(err2))
+
+
+@pytest.mark.slow
 def test_estimator_choices():
     src = _src()
     for est in ("gnb", "hutchinson", "empirical_fisher"):

@@ -7,6 +7,9 @@ any state, any chunk-multiple length.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # whole module is property-based
 from hypothesis import given, settings, strategies as st
 
 from repro.models.rwkv import CHUNK, LOG_DECAY_CLAMP, wkv_chunked, wkv_scan
