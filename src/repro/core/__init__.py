@@ -19,7 +19,8 @@ from .estimators import (empirical_fisher_estimator, exact_diag_hessian,
                          subsample_batch)
 from .baselines import adahessian, adamw, lion, sgd, signgd
 from .engine import (EngineState, OptimizerEngine, ShardLayout, build_layout,
-                     engine_partition_specs, ravel_shards, unravel_shards)
+                     engine_partition_specs, flat_shard_spec, ravel_shards,
+                     unravel_shards)
 from .clipping import ClipState, clip_by_global_norm, clip_trigger_rate
 from .schedule import (constant, inverse_sqrt, linear_warmup_cosine,
                        linear_warmup_linear_decay)

@@ -262,17 +262,31 @@ class OptimizerEngine:
 
     # -- the step -----------------------------------------------------------
 
+    def ravel_grads(self, params: PyTree,
+                    grads: PyTree) -> Tuple[jnp.ndarray, ...]:
+        """Grads pytree -> fp32 flat shards in this engine's layout — the
+        representation the compressed all-reduce (distributed/compression)
+        and :meth:`step_shards` consume."""
+        return ravel_shards(self.layout(params), grads, dtype=jnp.float32)
+
     def step(self, state: EngineState, params: PyTree, grads: PyTree,
              lr) -> tuple:
         """One optimizer step.  ``lr`` is a traced scalar (the trainer
         evaluates the schedule once, outside the engine).
 
         Returns ``(new_params, new_state)``."""
+        return self.step_shards(state, params, self.ravel_grads(params, grads),
+                                lr)
+
+    def step_shards(self, state: EngineState, params: PyTree,
+                    g_sh: Tuple[jnp.ndarray, ...], lr) -> tuple:
+        """:meth:`step` with the gradients already raveled to flat fp32
+        shards (the trainer ravels once, optionally runs the in-collective
+        compression on the flat view, then lands here)."""
         lay = self.layout(params)
         lr = jnp.asarray(lr, jnp.float32)
         c1 = (state.count + 1).astype(jnp.float32)  # bias-correction step
         p_sh = ravel_shards(lay, params)
-        g_sh = ravel_shards(lay, grads, dtype=jnp.float32)
         new_p, new_m, new_h = [], [], []
         nclip = jnp.zeros((), jnp.float32)
         for i in range(lay.n_shards):
@@ -393,18 +407,23 @@ class OptimizerEngine:
         return out
 
 
+def flat_shard_spec(a, mesh=None):
+    """PartitionSpec for one 1-D flat shard: sharded over the ``data`` mesh
+    axis when divisible (FSDP-style), else replicated.  Shared by the
+    engine's m/h shards and the compressor's error-feedback shards."""
+    from jax.sharding import PartitionSpec as P
+    if (mesh is not None and "data" in mesh.shape
+            and a.shape[0] % mesh.shape["data"] == 0):
+        return P("data")
+    return P()
+
+
 def engine_partition_specs(opt_state: EngineState, mesh=None) -> EngineState:
     """PartitionSpecs for an EngineState: flat shards are sharded over the
     ``data`` mesh axis when divisible (FSDP-style), else replicated."""
     from jax.sharding import PartitionSpec as P
     scalar = P()
-
-    def spec(a):
-        if (mesh is not None and "data" in mesh.shape
-                and a.shape[0] % mesh.shape["data"] == 0):
-            return P("data")
-        return P()
-
-    return EngineState(count=scalar, m=tuple(spec(a) for a in opt_state.m),
-                       h=tuple(spec(a) for a in opt_state.h),
+    return EngineState(count=scalar,
+                       m=tuple(flat_shard_spec(a, mesh) for a in opt_state.m),
+                       h=tuple(flat_shard_spec(a, mesh) for a in opt_state.h),
                        hess_count=scalar, clip_fraction=scalar)

@@ -1,4 +1,5 @@
 from .sharding import (batch_specs, cache_specs, constrain, fsdp_axis,
                        param_shardings, partition_params,
                        set_activation_mesh, to_shardings)
-from .compression import CompressionState, GradCompressor, compressed_bytes
+from .compression import (CompressionState, FlatCompressionState,
+                          GradCompressor, compressed_bytes)

@@ -1,35 +1,109 @@
-"""Gradient compression for data-parallel reduction at 1000+ node scale.
+"""In-collective gradient compression for the data-parallel reduction.
 
 Beyond-paper lever (DESIGN.md §5): int8 block-quantized gradients with
 per-block fp32 scales and *error feedback* (the quantization residual is
-carried into the next step), cutting DP all-reduce bytes ~4x vs fp32 /
+carried into the next step), cutting the DP gather bytes ~4x vs fp32 /
 ~2x vs bf16.  Unbiasedness is preserved in expectation by stochastic
 rounding; error feedback bounds the bias accumulation (Karimireddy et al.).
 
-Usage (wraps any GradientTransformation's input):
+The production path operates on the optimizer engine's **flat gradient
+shards** (core/engine.py), not on a params-shaped pytree, and runs *inside*
+the data-parallel collective via ``shard_map`` over the fsdp axis:
 
-    comp = GradCompressor(block=256)
-    cstate = comp.init(grads_shape)
-    grads_q, cstate = comp.roundtrip(grads, cstate, rng)   # quantize+dequant
+    full fp32 grad shard                 (XLA reduce-scatters to feed the
+        |  in_spec P(fsdp)               shard_map — fp32 only ever exists
+        v                                segment-sharded on the wire)
+    local segment + error-feedback segment
+        |  _quantize: int8 + per-256-block fp32 scales
+        v
+    all_gather(int8), all_gather(scales)   <-- the bytes that cross the wire
+        |  dequantize
+        v
+    full reduced fp32 shard (replicated), new error segment (sharded)
+
+Two properties make the result *identical* on any device count (the
+1-vs-8-device parity tier in tests/test_distributed_engine.py):
+
+  * segments are always multiples of the quantization block (engine shards
+    are padded to 128K elements, so any power-of-two fsdp axis keeps the
+    256-element scale blocks aligned with the single-device blocking);
+  * stochastic rounding noise is a counter-based hash of
+    (seed, global element index) — never of device id or segment shape.
+
+Error feedback is a flat fp32 buffer per engine shard
+(:class:`FlatCompressionState`, stored in ``TrainState.comp_state`` and
+sharded over the fsdp axis like the engine's m/h shards).
+
+The legacy params-pytree ``roundtrip`` API is kept for tests and for
+mesh-agnostic experimentation.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PyTree = Any
+
+_GOLDEN = 0x9E3779B9  # 2^32 / golden ratio; per-shard seed decorrelation
 
 
 class CompressionState(NamedTuple):
     error: PyTree  # error-feedback residuals, same structure as grads
 
 
-def _quantize(x, block: int, rng):
-    """int8 block quantization with stochastic rounding.
+class FlatCompressionState(NamedTuple):
+    """Error feedback over the engine's flat gradient shards: one fp32
+    buffer per shard, same (padded) length, sharded over the fsdp axis."""
 
-    Returns (q int8, scales fp32, dequantized fp32)."""
+    error: Tuple[jnp.ndarray, ...]
+
+
+# ---------------------------------------------------------------------------
+# quantization core
+
+
+def _as_seed(rng):
+    """Normalize an rng (PRNGKey, typed key, or int scalar) to uint32."""
+    if rng is None:
+        return None
+    if not isinstance(rng, jax.Array):
+        rng = jnp.asarray(rng)
+    if rng.ndim == 0 and jnp.issubdtype(rng.dtype, jnp.integer):
+        return rng.astype(jnp.uint32)
+    return jax.random.randint(rng, (), 0,
+                              jnp.iinfo(jnp.int32).max).astype(jnp.uint32)
+
+
+def _uniform_noise(seed, idx):
+    """Counter-based uniform noise in [-0.5, 0.5).
+
+    A pure function of (seed, global element index) — murmur3-style integer
+    finalizer — so the same element rounds the same way regardless of how
+    the shard is segmented across devices.  jax.random.uniform keyed per
+    device would break 1-vs-N-device trajectory parity.
+    """
+    x = idx.astype(jnp.uint32) * jnp.uint32(2654435761) + seed
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x.astype(jnp.float32) * jnp.float32(2.0 ** -32) - jnp.float32(0.5)
+
+
+def _quantize(x, block: int, rng=None, *, offset=0):
+    """int8 block quantization with per-block fp32 scales.
+
+    ``rng`` None selects round-to-nearest (|deq - x| <= scale/2, and the
+    fp32 residual ``x - deq`` is *exact* by Sterbenz); otherwise stochastic
+    rounding driven by ``_uniform_noise`` (|deq - x| <= scale, unbiased in
+    expectation).  ``offset`` is the global element index of ``x[0]`` within
+    its flat shard — it keys the noise, not the math, so segmenting a shard
+    changes nothing as long as segments stay block-aligned.
+
+    Returns (q int8 [nblocks, block], scales fp32 [nblocks, 1], deq fp32
+    shaped like x)."""
     flat = x.reshape(-1)
     pad = (-flat.size) % block
     flat = jnp.pad(flat, (0, pad))
@@ -37,15 +111,106 @@ def _quantize(x, block: int, rng):
     scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
     scale = jnp.maximum(scale, 1e-12)
     scaled = blocks / scale
-    noise = jax.random.uniform(rng, scaled.shape, minval=-0.5, maxval=0.5)
-    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    seed = _as_seed(rng)
+    if seed is not None:
+        idx = (jnp.asarray(offset, jnp.uint32)
+               + jnp.arange(flat.size, dtype=jnp.uint32)).reshape(-1, block)
+        scaled = scaled + _uniform_noise(seed, idx)
+    q = jnp.clip(jnp.round(scaled), -127, 127).astype(jnp.int8)
     deq = (q.astype(jnp.float32) * scale).reshape(-1)[:x.size].reshape(x.shape)
     return q, scale, deq
+
+
+# ---------------------------------------------------------------------------
+# the compressor
 
 
 class GradCompressor:
     def __init__(self, block: int = 256):
         self.block = block
+
+    # -- flat-shard path (the production pipeline) --------------------------
+
+    def init_shards(self, layout) -> FlatCompressionState:
+        """Zero error feedback matching an engine ShardLayout."""
+        return FlatCompressionState(error=tuple(
+            jnp.zeros((s,), jnp.float32) for s in layout.shard_sizes))
+
+    def wire_bytes(self, layout) -> Tuple[int, ...]:
+        """Per-shard bytes on the wire for the compressed gather phase:
+        n int8 payload + 4 bytes per 256-block fp32 scale."""
+        return tuple(int(n) + 4 * (-(-int(n) // self.block))
+                     for n in layout.shard_sizes)
+
+    def allreduce_shards(self, g_shards, state: FlatCompressionState, rng, *,
+                         mesh=None, axis=None
+                         ) -> tuple[Tuple[jnp.ndarray, ...],
+                                    FlatCompressionState]:
+        """Compressed data-parallel reduction over flat gradient shards.
+
+        With a mesh carrying the fsdp axis, each shard runs through a
+        ``shard_map``: the device's reduced segment (+ its error-feedback
+        segment) is quantized to int8 + per-block scales, the int8/scale
+        representation is gathered across the axis (equivalently: a psum of
+        the zero-padded per-device segments — disjoint supports make the
+        sum a gather), and dequantized on the far side.  Without a mesh (or
+        when the axis doesn't divide the shard into block-aligned segments)
+        the identical math runs on the whole shard locally, so enabling a
+        mesh never changes the training trajectory.
+        """
+        if mesh is None:
+            from .sharding import activation_mesh
+            mesh = activation_mesh()
+        if axis is None and mesh is not None:
+            from .sharding import fsdp_axis
+            axis = fsdp_axis(mesh)
+        seed = _as_seed(rng)
+        out_g, out_e = [], []
+        for i, (g, e) in enumerate(zip(g_shards, state.error)):
+            sseed = seed ^ jnp.uint32((_GOLDEN * (i + 1)) & 0xFFFFFFFF)
+            deq, err = self._allreduce_one(g, e, sseed, mesh, axis)
+            out_g.append(deq)
+            out_e.append(err)
+        return tuple(out_g), FlatCompressionState(error=tuple(out_e))
+
+    def _allreduce_one(self, g, e, seed, mesh, axis):
+        n = g.shape[0]
+        axes = (axis,) if isinstance(axis, str) else tuple(axis or ())
+        ndev = (int(np.prod([mesh.shape[a] for a in axes]))
+                if (mesh is not None and axes) else 1)
+        if ndev <= 1 or n % (ndev * self.block) != 0:
+            # mesh-less (tests, single host) or segments would straddle a
+            # scale block: same math, whole shard, offset 0
+            x = g.astype(jnp.float32) + e
+            _, _, deq = _quantize(x, self.block, seed)
+            return deq, x - deq
+
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        block, seg = self.block, n // ndev
+
+        def body(g_seg, e_seg, sd):
+            # combined (major-to-minor) index along the composite fsdp axis
+            idx = jnp.int32(0)
+            for a in axes:
+                idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+            x = g_seg.astype(jnp.float32) + e_seg
+            q, scale, deq = _quantize(x, block, sd, offset=idx * seg)
+            # int8 payload + fp32 scales are what cross the wire
+            q_all = jax.lax.all_gather(q.reshape(-1), axes[0] if
+                                       len(axes) == 1 else axes, tiled=True)
+            s_all = jax.lax.all_gather(scale, axes[0] if
+                                       len(axes) == 1 else axes, tiled=True)
+            full = (q_all.reshape(-1, block).astype(jnp.float32)
+                    * s_all).reshape(-1)
+            return full, x - deq
+
+        spec = P(axes if len(axes) > 1 else axes[0])
+        return shard_map(body, mesh=mesh, in_specs=(spec, spec, P()),
+                         out_specs=(P(), spec), check_rep=False)(g, e, seed)
+
+    # -- legacy params-pytree path (mesh-agnostic simulation) ----------------
 
     def init(self, grads: PyTree) -> CompressionState:
         return CompressionState(
@@ -54,13 +219,11 @@ class GradCompressor:
 
     def roundtrip(self, grads: PyTree, state: CompressionState,
                   rng) -> tuple[PyTree, CompressionState]:
-        """Simulate the compressed all-reduce: returns the gradients as the
-        receiving end would see them, plus updated error feedback.
-
-        In the jitted train step the quantize happens *before* the psum and
-        the dequantize after; XLA then moves int8 bytes over ICI.  Here the
-        roundtrip form keeps the math identical while staying mesh-agnostic.
-        """
+        """Simulate the compressed all-reduce on a params-shaped pytree:
+        returns the gradients as the receiving end would see them, plus
+        updated error feedback.  The flat-shard ``allreduce_shards`` is the
+        production path; this form stays for A/B experiments on unraveled
+        trees."""
         leaves, treedef = jax.tree.flatten(grads)
         keys = jax.random.split(rng, len(leaves))
         keys = jax.tree.unflatten(treedef, list(keys))
@@ -79,7 +242,10 @@ class GradCompressor:
 
 
 def compressed_bytes(grads: PyTree, block: int = 256) -> int:
-    """Bytes on the wire for the compressed representation (int8 + scales)."""
+    """Bytes on the wire for the compressed representation (int8 + scales).
+
+    Works on any pytree of arrays — a params-shaped grad tree or a tuple of
+    the engine's flat shards."""
     total = 0
     for g in jax.tree.leaves(grads):
         n = g.size

@@ -27,38 +27,19 @@ from jax.sharding import PartitionSpec as P
 
 from ..configs import ARCHS, ASSIGNED, get_config, input_specs
 from ..configs.shapes import SHAPES, applicable
-from ..core.engine import EngineState, engine_partition_specs
 from ..distributed.sharding import (batch_specs, cache_specs,
                                     partition_params, set_activation_mesh,
                                     to_shardings)
 from ..models import get_model
-from ..train.train_state import TrainState
+from ..train.train_state import TrainState, state_partition_specs  # noqa: F401
+# ^^ state_partition_specs lives with TrainState now (the elastic driver
+# needs it without this module's XLA_FLAGS side effect); re-exported here
+# for existing callers.
 from ..train.trainer import TrainerConfig, make_train_fns
 from .hlo_analysis import analyze_hlo
 from .mesh import make_production_mesh
 from .roofline import (dominant_term, model_flops_infer, model_flops_train,
                        roofline_terms)
-
-
-def state_partition_specs(state_shape: TrainState, pspecs,
-                          mesh=None) -> TrainState:
-    """PartitionSpecs for a TrainState.
-
-    The engine's flat optimizer shards are 1-D and block-padded, so with a
-    ``mesh`` they shard over the ``data`` axis (FSDP-style) whenever the
-    size divides; without a mesh they replicate."""
-    scalar = P()
-    opt = state_shape.opt_state
-    if isinstance(opt, EngineState):
-        opt_specs = engine_partition_specs(opt, mesh)
-    else:  # generic: scalar-replicate unknown optimizer state
-        opt_specs = jax.tree.map(lambda _: scalar, opt)
-    return TrainState(step=scalar, params=pspecs, opt_state=opt_specs,
-                      clip_state=jax.tree.map(lambda _: scalar,
-                                              state_shape.clip_state),
-                      rng=scalar,
-                      comp_state=jax.tree.map(lambda _: scalar,
-                                              state_shape.comp_state))
 
 
 def _ns(mesh, spec_tree):

@@ -33,7 +33,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
-def make_mesh(shape, axes):
-    """Generic helper for tests/examples (e.g. (2, 2) on 4 host devices)."""
+def make_mesh(shape, axes, devices=None):
+    """Generic helper for tests/examples (e.g. (2, 2) on 4 host devices).
+
+    ``devices`` restricts the mesh to an explicit device subset — the
+    elastic driver uses this to rebuild a smaller mesh after losing nodes
+    (e.g. 8 -> 4 devices) without restarting the process."""
+    if devices is not None:
+        import numpy as np
+        from jax.sharding import Mesh
+        return Mesh(np.asarray(devices).reshape(tuple(shape)), tuple(axes))
     return jax.make_mesh(tuple(shape), tuple(axes),
                          **_mesh_kwargs(len(axes)))

@@ -1,23 +1,25 @@
-"""Production training driver.
+"""Production training driver — elastic.
 
     PYTHONPATH=src python -m repro.launch.train --arch gpt2-small \
         --opt sophia_g --steps 400 --global-batch 32 --seq-len 256 \
-        --ckpt-dir /tmp/run1
+        --ckpt-dir /tmp/run1 --elastic
 
 Features: any registered arch (--smoke for the reduced config), any
 optimizer, sharded execution over all visible devices (mesh auto-shaped),
-Algorithm-3 hessian cadence, gradient accumulation, async checkpointing
-with auto-resume, preemption-safe exit, straggler telemetry.
+Algorithm-3 hessian cadence, gradient accumulation, buffer donation on the
+jitted step (flat params/m/h update in place), async checkpointing with
+auto-resume, preemption-safe exit, and an elastic retry loop: every attempt
+rebuilds the mesh from the *surviving* device set and re-shards the latest
+checkpoint onto it (checkpoint -> shrink mesh -> resume), so node loss or a
+persistent straggler degrades capacity instead of killing the run.
 """
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -27,21 +29,29 @@ from ..distributed.sharding import (batch_specs, partition_params,
                                     set_activation_mesh)
 from ..train import TrainerConfig, checkpoint as ckpt, make_engine, \
     make_train_fns
-from ..train.elastic import PreemptionGuard, StragglerDetector
+from ..train.elastic import (MeshDegraded, PreemptionGuard, StragglerDetector,
+                             run_resumable)
+from ..train.train_state import state_partition_specs
 from .mesh import make_mesh
 
 
-def build_mesh():
-    n = len(jax.devices())
+def build_mesh(devices=None):
+    """Auto mesh: the data axis gets at least the model axis's width — it
+    carries the gradient reduction, the FSDP flat shards and the
+    in-collective compression, so it must not collapse to 1 (the old
+    model-first shaping made ``--compress-grads`` silently inert on <= 8
+    devices).  ``devices`` restricts to a subset (the elastic driver's
+    shrunken mesh); TP-heavy layouts should pass an explicit mesh."""
+    devs = list(jax.devices()) if devices is None else list(devices)
+    n = len(devs)
     if n == 1:
         return None
-    # widest data axis that divides, model gets the rest
     model = 1
-    for m in (8, 4, 2):
-        if n % m == 0:
+    for m in (4, 2):
+        if n % m == 0 and n // m >= m:
             model = m
             break
-    return make_mesh((n // model, model), ("data", "model"))
+    return make_mesh((n // model, model), ("data", "model"), devices=devs)
 
 
 def _final_save(ckpt_dir, step, state, extra):
@@ -50,6 +60,37 @@ def _final_save(ckpt_dir, step, state, extra):
     ckpt.wait_for_pending()
     if ckpt.latest_step(ckpt_dir) != step:
         ckpt.save(ckpt_dir, step, state, extra=extra)
+
+
+def compile_steps(cfg, tc, mesh, sample_batch, state_shape=None):
+    """Jit the train/hess steps for ``mesh`` (explicit shardings + buffer
+    donation) and return (train_step, hess_step, init_fn, state_shardings,
+    batch_shardings) — state/batch shardings are None on a mesh-less run.
+
+    ``state_shape`` (an eval_shape of init_fn, mesh-independent) can be
+    passed in to avoid re-tracing the model abstractly."""
+    init_fn, train_step, hess_step = make_train_fns(cfg, tc)
+    # donate the TrainState: the flat params/m/h shards alias input->output,
+    # halving optimizer-state peak memory (CPU has no donation; skip the
+    # warning noise there)
+    dn = (0,) if jax.default_backend() != "cpu" else ()
+    set_activation_mesh(mesh)
+    if mesh is None:
+        return (jax.jit(train_step, donate_argnums=dn),
+                jax.jit(hess_step, donate_argnums=dn), init_fn, None, None)
+    if state_shape is None:
+        state_shape = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    pspecs = partition_params(state_shape.params, mesh, fsdp=True)
+    sspecs = state_partition_specs(state_shape, pspecs, mesh)
+    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    ssh = ns(sspecs)
+    bsh = ns(batch_specs(sample_batch, mesh))
+    return (jax.jit(train_step, in_shardings=(ssh, bsh),
+                    out_shardings=(ssh, None), donate_argnums=dn),
+            jax.jit(hess_step, in_shardings=(ssh, bsh),
+                    out_shardings=(ssh, None), donate_argnums=dn),
+            init_fn, ssh, bsh)
 
 
 def main(argv=None):
@@ -70,6 +111,8 @@ def main(argv=None):
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--remat", default="none")
     ap.add_argument("--fused-kernel", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="in-collective int8 all-reduce over the fsdp axis")
     ap.add_argument("--state-dtype", default="float32",
                     choices=["float32", "bfloat16"])
     ap.add_argument("--ckpt-dir", default=None)
@@ -77,6 +120,16 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--data", default="synthetic")
     ap.add_argument("--data-path", default=None)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="use only the first N visible devices")
+    ap.add_argument("--elastic", action="store_true",
+                    help="retry-with-restore on failure (run_resumable)")
+    ap.add_argument("--max-restarts", type=int, default=None,
+                    help="restart budget (default: 3 with --elastic, else 0)")
+    ap.add_argument("--degrade-after", type=int, default=0,
+                    help="with --elastic + --ckpt-dir: after N straggler "
+                         "flags, checkpoint, halve the device set, and "
+                         "resume on the smaller mesh (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -87,89 +140,127 @@ def main(argv=None):
         weight_decay=args.weight_decay, gamma=args.gamma,
         hess_interval=args.hess_interval, hess_subbatch=args.hess_subbatch,
         grad_accum=args.grad_accum, remat=args.remat,
-        fused_kernel=args.fused_kernel, state_dtype=args.state_dtype,
-        seed=args.seed)
+        fused_kernel=args.fused_kernel, compress_grads=args.compress_grads,
+        state_dtype=args.state_dtype, seed=args.seed)
     src = make_source(DataConfig(
         seq_len=args.seq_len, global_batch=args.global_batch,
         vocab_size=cfg.vocab_size, seed=args.seed, source=args.data,
         path=args.data_path))
+    sample = {k: jnp.asarray(v) for k, v in src.batch_at(0).items()}
 
-    init_fn, train_step, hess_step = make_train_fns(cfg, tc)
-    mesh = build_mesh()
-    if mesh is not None:
-        set_activation_mesh(mesh)
-        state = init_fn(jax.random.PRNGKey(args.seed))
-        pspecs = partition_params(state.params, mesh, fsdp=True)
-        from .dryrun import state_partition_specs
-        sspecs = state_partition_specs(state, pspecs, mesh)
-        ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
-                                    is_leaf=lambda x: isinstance(x, P))
-        state = jax.device_put(state, ns(sspecs))
-        sample = {k: jnp.asarray(v) for k, v in src.batch_at(0).items()}
-        bspecs = ns(batch_specs(sample, mesh))
-        train_step = jax.jit(train_step, in_shardings=(ns(sspecs), bspecs),
-                             out_shardings=(ns(sspecs), None))
-        hess_step = jax.jit(hess_step, in_shardings=(ns(sspecs), bspecs),
-                            out_shardings=(ns(sspecs), None))
-    else:
-        state = init_fn(jax.random.PRNGKey(args.seed))
-        train_step = jax.jit(train_step)
-        hess_step = jax.jit(hess_step)
+    # The TrainState shape and the flat-shard layout are mesh-independent:
+    # traced abstractly once, shared by every setup()/restore across mesh
+    # reconfigurations.  The layout is recorded alongside every checkpoint
+    # (the elastic restore verifies it, and offline tooling can rebuild the
+    # unravel spec without the code).
+    state_shape = jax.eval_shape(make_train_fns(cfg, tc)[0],
+                                 jax.random.PRNGKey(args.seed))
+    layout_meta = dict(make_engine(tc).describe(state_shape.params),
+                       optimizer=args.opt, state_dtype=args.state_dtype,
+                       compress_grads=bool(args.compress_grads))
 
-    # flat-shard layout recorded alongside every checkpoint (restore sanity
-    # check + elastic tooling can rebuild the unravel spec without the code)
-    layout_meta = dict(make_engine(tc).describe(state.params),
-                       optimizer=args.opt, state_dtype=args.state_dtype)
+    all_devices = list(jax.devices())
+    ctx = {"devices": all_devices[:args.devices] if args.devices
+           else all_devices}
 
-    start = 0
-    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+    def setup():
+        """(Re)build mesh + jitted steps for the current device set.  A
+        retry on an unchanged device set (transient failure, no degrade)
+        keeps the compiled steps — retraces cost minutes on real models."""
+        key = tuple(ctx["devices"])
+        if ctx.get("setup_key") == key:
+            return
+        mesh = build_mesh(ctx["devices"])
+        tjit, hjit, init_fn, ssh, bsh = compile_steps(cfg, tc, mesh, sample,
+                                                      state_shape=state_shape)
+        ctx.update(mesh=mesh, tjit=tjit, hjit=hjit, init_fn=init_fn,
+                   ssh=ssh, bsh=bsh, setup_key=key)
+
+    def make_state():
+        setup()
+        state = ctx["init_fn"](jax.random.PRNGKey(args.seed))
+        if ctx["ssh"] is not None:
+            state = jax.device_put(state, ctx["ssh"])
+        return state
+
+    def restore_latest():
+        if not args.ckpt_dir or ckpt.latest_step(args.ckpt_dir) is None:
+            return None
         prev = (ckpt.read_manifest(args.ckpt_dir).get("extra") or {})
-        for field in ("optimizer", "state_dtype"):
+        for field in ("optimizer", "state_dtype", "compress_grads"):
             # different optimizer families (and state dtypes) share the flat
             # (m, h) layout, so a silent restore would reinterpret the
-            # curvature state — refuse instead
+            # curvature state; flipping compress_grads changes the
+            # TrainState leaf count — refuse all three instead of dying in
+            # restore (SystemExit is deliberately not retried by
+            # run_resumable)
             if prev.get(field) not in (None, layout_meta[field]):
                 raise SystemExit(
                     f"[resume] checkpoint in {args.ckpt_dir} was written "
                     f"with {field}={prev[field]!r}; refusing to resume with "
                     f"{layout_meta[field]!r} (use a fresh --ckpt-dir)")
-        like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
-                            state)
-        state, start = ckpt.restore(args.ckpt_dir, like)
-        print(f"[resume] restored step {start} from {args.ckpt_dir}")
+        setup()
+        state, start = ckpt.restore_resharded(
+            args.ckpt_dir, state_shape, shardings=ctx["ssh"],
+            expect_layout=layout_meta)
+        print(f"[resume] restored step {start} from {args.ckpt_dir} onto "
+              f"{len(ctx['devices'])} device(s)")
+        return state, start
 
     guard = PreemptionGuard()
-    straggler = StragglerDetector()
     needs_hess = args.opt in ("sophia_g", "sophia_h", "adahessian")
-    t_start = time.time()
-    for t in range(start, args.steps):
-        t0 = time.time()
-        batch = {k: jnp.asarray(v) for k, v in src.batch_at(t).items()}
-        fn = hess_step if (needs_hess and t % tc.hess_interval == 0) \
-            else train_step
-        state, metrics = fn(state, batch)
-        dt = time.time() - t0
-        if straggler.observe(dt):
-            print(f"[straggler] step {t} took {dt:.2f}s "
-                  f"(mean {straggler.mean:.2f}s)")
-        if t % args.log_every == 0:
-            loss = float(metrics["loss"])
-            print(f"step {t:6d} loss {loss:.4f} "
-                  f"gnorm {float(metrics['grad_norm']):.3f} {dt * 1e3:.0f}ms",
-                  flush=True)
-        if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
-            ckpt.save(args.ckpt_dir, t + 1, state, async_=True,
-                      extra=layout_meta)
-        if guard.requested:
-            print(f"[preempt] checkpointing at step {t + 1} and exiting")
-            if args.ckpt_dir:
-                _final_save(args.ckpt_dir, t + 1, state, layout_meta)
-            return state
-    if args.ckpt_dir:
-        _final_save(args.ckpt_dir, args.steps, state, layout_meta)
-    print(f"done: {args.steps - start} steps in {time.time() - t_start:.1f}s "
-          f"(straggler flags: {straggler.flagged})")
-    return state
+
+    def run(state, start):
+        straggler = StragglerDetector()
+        t_start = time.time()
+        for t in range(start, args.steps):
+            t0 = time.time()
+            batch = {k: jnp.asarray(v) for k, v in src.batch_at(t).items()}
+            if ctx["bsh"] is not None:
+                batch = jax.device_put(batch, ctx["bsh"])
+            fn = ctx["hjit"] if (needs_hess and t % tc.hess_interval == 0) \
+                else ctx["tjit"]
+            state, metrics = fn(state, batch)
+            dt = time.time() - t0
+            if straggler.observe(dt):
+                print(f"[straggler] step {t} took {dt:.2f}s "
+                      f"(mean {straggler.mean:.2f}s)")
+                if (args.elastic and args.degrade_after and args.ckpt_dir
+                        and straggler.flagged >= args.degrade_after
+                        and len(ctx["devices"]) > 1):
+                    # checkpoint -> shrink mesh -> resume: drop the slow
+                    # half of the device set and let run_resumable restore
+                    # this exact step onto the smaller mesh
+                    _final_save(args.ckpt_dir, t + 1, state, layout_meta)
+                    ctx["devices"] = ctx["devices"][
+                        :max(1, len(ctx["devices"]) // 2)]
+                    raise MeshDegraded(
+                        f"persistent straggler at step {t}; degrading to "
+                        f"{len(ctx['devices'])} device(s)")
+            if t % args.log_every == 0:
+                loss = float(metrics["loss"])
+                print(f"step {t:6d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"{dt * 1e3:.0f}ms", flush=True)
+            if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
+                ckpt.save(args.ckpt_dir, t + 1, state, async_=True,
+                          extra=layout_meta)
+            if guard.requested:
+                print(f"[preempt] checkpointing at step {t + 1} and exiting")
+                if args.ckpt_dir:
+                    _final_save(args.ckpt_dir, t + 1, state, layout_meta)
+                return state
+        if args.ckpt_dir:
+            _final_save(args.ckpt_dir, args.steps, state, layout_meta)
+        print(f"done: {args.steps - start} steps in "
+              f"{time.time() - t_start:.1f}s "
+              f"(straggler flags: {straggler.flagged})")
+        return state
+
+    max_restarts = args.max_restarts if args.max_restarts is not None \
+        else (3 if args.elastic else 0)
+    return run_resumable(make_state, run, restore_latest,
+                         max_restarts=max_restarts)
 
 
 if __name__ == "__main__":

@@ -120,6 +120,42 @@ def _gc(ckpt_dir: str, keep: int) -> None:
         shutil.rmtree(_step_dir(ckpt_dir, s), ignore_errors=True)
 
 
+def _check_layout(recorded: dict, expected: dict) -> None:
+    """Refuse a cross-mesh restore when the flat-shard layout differs.
+
+    The layout (block size, shard dtypes/sizes) is a function of the model
+    and engine config only — never of the mesh — so any mismatch means the
+    checkpoint was written by an incompatible engine and the flat m/h
+    buffers would be silently reinterpreted."""
+    for key in ("block", "shards"):
+        if key in recorded and key in expected \
+                and recorded[key] != expected[key]:
+            raise ValueError(
+                f"checkpoint flat-shard layout mismatch on {key!r}: "
+                f"checkpoint has {recorded[key]!r}, engine expects "
+                f"{expected[key]!r} (incompatible engine config; "
+                f"use a fresh ckpt dir)")
+
+
+def restore_resharded(ckpt_dir: str, like: PyTree, *,
+                      shardings: Optional[PyTree] = None,
+                      expect_layout: Optional[dict] = None,
+                      step: Optional[int] = None) -> tuple[PyTree, int]:
+    """Elastic cross-mesh restore: re-shard flat shards onto a *different*
+    device count.
+
+    The engine's flat shards are 1-D, block-padded at init, and
+    mesh-independent, so a checkpoint written on N devices restores onto
+    any M-device mesh by device_put-ting the same buffers against the new
+    mesh's NamedShardings.  ``expect_layout`` (the engine's
+    ``ShardLayout.manifest()``, as recorded in the checkpoint manifest's
+    ``extra``) is verified against the recorded layout first."""
+    manifest = read_manifest(ckpt_dir, step)
+    if expect_layout is not None:
+        _check_layout(manifest.get("extra") or {}, expect_layout)
+    return restore(ckpt_dir, like, step=manifest["step"], shardings=shardings)
+
+
 def restore(ckpt_dir: str, like: PyTree, *, step: Optional[int] = None,
             shardings: Optional[PyTree] = None) -> tuple[PyTree, int]:
     """Restore into the structure of ``like`` (a pytree of arrays or

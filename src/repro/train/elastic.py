@@ -21,6 +21,13 @@ import time
 from typing import Callable, Optional
 
 
+class MeshDegraded(RuntimeError):
+    """Raised by the elastic driver after checkpointing to request a
+    restart on a smaller mesh (persistent straggler / lost nodes).  Caught
+    by ``run_resumable``, whose ``restore_latest`` rebuilds the mesh from
+    the surviving device set and re-shards the checkpoint onto it."""
+
+
 class StragglerDetector:
     """Flags steps whose duration deviates from the EWMA by > z_thresh
     sigma.  At scale, per-host step-time telemetry feeds this; a flagged
@@ -33,14 +40,17 @@ class StragglerDetector:
         self.warmup = warmup
         self.mean = None
         self.var = 0.0
-        self.n = 0
+        self.n = 0           # deviation samples seen (excludes the baseline)
         self.flagged = 0
 
     def observe(self, dt: float) -> bool:
-        self.n += 1
         if self.mean is None:
+            # baseline sample: seeds the EWMA, contributes no deviation —
+            # it must NOT count toward warmup (counting it made the
+            # detector eligible to flag one deviation-sample early)
             self.mean = dt
             return False
+        self.n += 1
         delta = dt - self.mean
         # sigma floor: 1% of the mean, so perfectly steady step times
         # (var -> 0) still flag an obvious outlier instead of dividing by 0
@@ -79,16 +89,31 @@ def run_resumable(make_state: Callable[[], object],
 
     make_state() -> fresh state; restore_latest() -> (state, step) or None;
     run(state, start_step) raises on failure, returns final state on success.
+
+    A ``restore_latest`` raising FileNotFoundError (no checkpoint written
+    yet) falls back to a fresh state instead of killing the retry loop — a
+    crash *before* the first checkpoint must still be retried.  Any other
+    restore error (layout mismatch, corrupt leaf files) propagates: starting
+    fresh would overwrite the checkpoints it failed to read.
+
+    ``MeshDegraded`` is a deliberate checkpoint-and-reconfigure request,
+    not a failure: it triggers a restore without consuming the restart
+    budget.
     """
     attempts = 0
     while True:
-        restored = restore_latest()
+        try:
+            restored = restore_latest()
+        except FileNotFoundError:
+            restored = None
         if restored is not None:
             state, start = restored
         else:
             state, start = make_state(), 0
         try:
             return run(state, start)
+        except MeshDegraded:
+            continue
         except Exception:
             attempts += 1
             if attempts > max_restarts:

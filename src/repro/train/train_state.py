@@ -1,4 +1,4 @@
-"""TrainState pytree + constructors."""
+"""TrainState pytree + constructors + partition specs."""
 from __future__ import annotations
 
 from typing import Any, NamedTuple
@@ -15,4 +15,38 @@ class TrainState(NamedTuple):
     opt_state: PyTree          # EngineState: flat dtype-homogeneous shards
     clip_state: PyTree         # global-norm clip telemetry (paper Fig 7a)
     rng: jax.Array             # folded per step for estimator sampling
-    comp_state: PyTree = ()    # grad-compression error feedback (if enabled)
+    comp_state: PyTree = ()    # FlatCompressionState: error-feedback flat
+    #                            shards, same layout as opt_state.m (if
+    #                            grad compression is enabled)
+
+
+def state_partition_specs(state_shape: TrainState, pspecs,
+                          mesh=None) -> TrainState:
+    """PartitionSpecs for a TrainState.
+
+    The engine's flat optimizer shards — and the compressor's error-feedback
+    shards, which share their layout — are 1-D and block-padded, so with a
+    ``mesh`` they shard over the ``data`` axis (FSDP-style) whenever the
+    size divides; without a mesh they replicate."""
+    from jax.sharding import PartitionSpec as P
+
+    from ..core.engine import (EngineState, engine_partition_specs,
+                               flat_shard_spec)
+    from ..distributed.compression import FlatCompressionState
+
+    scalar = P()
+    opt = state_shape.opt_state
+    if isinstance(opt, EngineState):
+        opt_specs = engine_partition_specs(opt, mesh)
+    else:  # generic: scalar-replicate unknown optimizer state
+        opt_specs = jax.tree.map(lambda _: scalar, opt)
+    comp = state_shape.comp_state
+    if isinstance(comp, FlatCompressionState):
+        comp_specs = FlatCompressionState(
+            error=tuple(flat_shard_spec(a, mesh) for a in comp.error))
+    else:
+        comp_specs = jax.tree.map(lambda _: scalar, comp)
+    return TrainState(step=scalar, params=pspecs, opt_state=opt_specs,
+                      clip_state=jax.tree.map(lambda _: scalar,
+                                              state_shape.clip_state),
+                      rng=scalar, comp_state=comp_specs)

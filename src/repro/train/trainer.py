@@ -9,8 +9,9 @@ The host alternates:
 keeping the hot step's HLO free of estimator code (clean rooflines, and the
 levanter-style production structure).  Both steps share:
   grad accumulation (microbatch scan) -> global-norm clip (threshold 1.0,
-  trigger telemetry) -> [optional int8 compression roundtrip with persistent
-  error feedback] -> flat-buffer optimizer engine step.
+  trigger telemetry) -> ravel to flat fp32 shards -> [optional in-collective
+  int8 compression over the fsdp axis, error feedback persisted as flat
+  shards] -> flat-buffer optimizer engine step.
 
 The optimizer update itself is one ``engine.step(state, grads, lr)`` call
 for *every* optimizer: the engine (core/engine.py) keeps m/h as flat
@@ -147,18 +148,24 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
         return TrainState(step=jnp.zeros((), jnp.int32), params=params,
                           opt_state=engine.init(params),
                           clip_state=clipper.init(params), rng=s_rng,
-                          comp_state=(compressor.init(params)
-                                      if compressor is not None else ()))
+                          comp_state=(compressor.init_shards(
+                              engine.layout(params))
+                              if compressor is not None else ()))
 
     def _apply(state: TrainState, grads, metrics):
         grads, clip_state = clipper.update(grads, state.clip_state)
+        g_sh = engine.ravel_grads(state.params, grads)
         comp_state = state.comp_state
         if compressor is not None:
+            # in-collective int8 all-reduce over the flat shards: picks up
+            # the fsdp axis from the launcher-installed activation mesh
+            # (mesh-less runs use the identical math on the whole shard)
             crng = jax.random.fold_in(state.rng, state.step + (1 << 20))
-            grads, comp_state = compressor.roundtrip(grads, comp_state, crng)
+            g_sh, comp_state = compressor.allreduce_shards(g_sh, comp_state,
+                                                           crng)
         lr = schedule(state.opt_state.count)
-        params, opt_state = engine.step(state.opt_state, state.params,
-                                        grads, lr)
+        params, opt_state = engine.step_shards(state.opt_state, state.params,
+                                               g_sh, lr)
         metrics = dict(metrics,
                        grad_norm=clip_state.last_norm,
                        clip_triggers=clip_state.triggers,
@@ -218,13 +225,20 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
 def train_loop(cfg: ModelConfig, tc: TrainerConfig, source, *,
                num_steps: int, state: Optional[TrainState] = None,
                jit: bool = True, callback: Optional[Callable] = None,
-               start_step: int = 0):
+               start_step: int = 0, donate: bool = False):
     """Single-host reference loop (tests/benchmarks; launch/train.py is the
-    production multi-device driver)."""
+    production multi-device driver).
+
+    With ``donate=True`` (and a backend that implements donation — CPU
+    doesn't), the input TrainState is donated to the jitted step: the flat
+    params/m/h buffers update in place, halving optimizer-state peak
+    memory.  Opt-in here because it consumes the caller's ``state``
+    argument; the production driver always donates."""
     init_fn, train_step, hess_step = make_train_fns(cfg, tc)
     if jit:
-        train_step = jax.jit(train_step)
-        hess_step = jax.jit(hess_step)
+        dn = (0,) if donate and jax.default_backend() != "cpu" else ()
+        train_step = jax.jit(train_step, donate_argnums=dn)
+        hess_step = jax.jit(hess_step, donate_argnums=dn)
     if state is None:
         state = init_fn(jax.random.PRNGKey(tc.seed))
     needs_hess = tc.optimizer in ("sophia_g", "sophia_h", "adahessian")

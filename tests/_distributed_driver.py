@@ -1,0 +1,166 @@
+"""Subprocess driver for the 8-device simulation tier.
+
+Run by tests/test_distributed_engine.py with
+``--xla_force_host_platform_device_count=8`` so the SPMD engine path (mesh
+shard_map compression, FSDP flat shards, cross-mesh restore) executes on
+real (simulated) devices.  Prints one JSON object on the last line.
+
+Modes:
+    parity   — identical seed, 1-device vs 8-device mesh: step-for-step
+               losses for a given optimizer, with/without int8 compression,
+               plus the compressed wire-bytes accounting per flat shard.
+    elastic  — train 6 steps on an 8-device mesh, checkpoint, restore onto
+               a 4-device mesh, report bit-identity of params/m/h and the
+               continued loss trajectory through the next Hessian refresh.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import argparse
+import dataclasses
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.gpt2 import GPT2_TINY
+from repro.data import DataConfig, make_source
+from repro.distributed.compression import GradCompressor, compressed_bytes
+from repro.launch.mesh import make_mesh
+from repro.launch.train import compile_steps  # the production SPMD wiring
+from repro.train import TrainerConfig, checkpoint as ckpt, make_engine
+
+# fp32 compute: parity across meshes is then limited only by collective
+# reduction order (fp32 ulps), not bf16 forward rounding chaos
+CFG = dataclasses.replace(GPT2_TINY, dtype="float32")
+STEPS = 8
+HESS_INTERVAL = 3  # refreshes at t = 0, 3, 6  ->  >= 2 full intervals
+
+
+def _tc(opt, compress):
+    return TrainerConfig(optimizer=opt, peak_lr=1e-3, total_steps=100,
+                         warmup_steps=2, hess_interval=HESS_INTERVAL,
+                         hess_subbatch=4, compress_grads=compress, seed=0)
+
+
+def _mesh(n_dev):
+    if n_dev == 1:
+        return None
+    return make_mesh((n_dev, 1), ("data", "model"),
+                     devices=jax.devices()[:n_dev])
+
+
+def _source():
+    return make_source(DataConfig(seq_len=32, global_batch=8,
+                                  vocab_size=CFG.vocab_size, seed=0))
+
+
+def _setup(tc, mesh):
+    """The production driver's jit/sharding wiring (launch.train), so the
+    parity tier validates what actually runs, not a test-local copy."""
+    sample = {k: jnp.asarray(v) for k, v in _source().batch_at(0).items()}
+    train_step, hess_step, init_fn, ssh, bsh = compile_steps(CFG, tc, mesh,
+                                                             sample)
+    state = init_fn(jax.random.PRNGKey(0))
+    if ssh is not None:
+        state = jax.device_put(state, ssh)
+    return train_step, hess_step, init_fn, state, ssh, bsh
+
+
+def _trajectory(n_dev, opt, compress, steps=STEPS):
+    tc = _tc(opt, compress)
+    mesh = _mesh(n_dev)
+    train_step, hess_step, _, state, _, bsh = _setup(tc, mesh)
+    src = _source()
+    needs_hess = opt in ("sophia_g", "sophia_h", "adahessian")
+    losses = []
+    for t in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in src.batch_at(t).items()}
+        if bsh is not None:
+            batch = jax.device_put(batch, bsh)
+        fn = hess_step if (needs_hess and t % HESS_INTERVAL == 0) \
+            else train_step
+        state, metrics = fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    return losses, state
+
+
+def parity(args):
+    l1, _ = _trajectory(1, args.opt, args.compress)
+    l8, s8 = _trajectory(8, args.opt, args.compress)
+    out = {"losses_1": l1, "losses_8": l8}
+    if args.compress:
+        lay = make_engine(_tc(args.opt, True)).layout(
+            jax.device_get(s8.params))
+        comp = GradCompressor()
+        out["shard_sizes"] = [int(n) for n in lay.shard_sizes]
+        out["wire_bytes"] = [int(b) for b in comp.wire_bytes(lay)]
+        out["compressed_bytes"] = int(compressed_bytes(
+            tuple(jnp.zeros((n,), jnp.float32) for n in lay.shard_sizes)))
+    return out
+
+
+def elastic(args):
+    tc = _tc("sophia_g", False)
+    train_step, hess_step, _, state, _, bsh = _setup(tc, _mesh(8))
+    src = _source()
+    losses_before = []
+    for t in range(6):
+        batch = jax.device_put(
+            {k: jnp.asarray(v) for k, v in src.batch_at(t).items()}, bsh)
+        fn = hess_step if t % HESS_INTERVAL == 0 else train_step
+        state, metrics = fn(state, batch)
+        losses_before.append(float(metrics["loss"]))
+
+    layout_meta = make_engine(tc).describe(jax.device_get(state.params))
+    ckpt.save(args.ckpt_dir, 6, state, extra=layout_meta)
+    saved = jax.device_get(state)  # host snapshot for bit-identity check
+
+    # "lose" half the machine: rebuild the production wiring on a 4-device
+    # mesh and re-shard the checkpoint onto it
+    train_step, hess_step, init_fn, _, ssh, bsh4 = _setup(tc, _mesh(4))
+    like = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    state4, start = ckpt.restore_resharded(args.ckpt_dir, like, shardings=ssh,
+                                           expect_layout=layout_meta)
+    restored = jax.device_get(state4)
+
+    def bit_identical(a, b):
+        return all(np.array_equal(np.asarray(x), np.asarray(y))
+                   for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+    ident = {
+        "params": bit_identical(saved.params, restored.params),
+        "m": bit_identical(saved.opt_state.m, restored.opt_state.m),
+        "h": bit_identical(saved.opt_state.h, restored.opt_state.h),
+        "step": int(start) == 6,
+    }
+
+    losses_after = []
+    for t in range(start, start + 5):  # through the refreshes at t=6 and 9
+        batch = jax.device_put(
+            {k: jnp.asarray(v) for k, v in src.batch_at(t).items()}, bsh4)
+        fn = hess_step if t % HESS_INTERVAL == 0 else train_step
+        state4, metrics = fn(state4, batch)
+        losses_after.append(float(metrics["loss"]))
+    return {"bit_identical": ident, "losses_before": losses_before,
+            "losses_after": losses_after}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["parity", "elastic"], required=True)
+    ap.add_argument("--opt", default="sophia_g")
+    ap.add_argument("--compress", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    out = parity(args) if args.mode == "parity" else elastic(args)
+    print("RESULT " + json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

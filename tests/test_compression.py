@@ -67,3 +67,43 @@ def test_quantize_property(n, scale, seed):
     _, _, deq = _quantize(x, 256, jax.random.PRNGKey(seed + 1))
     rel = float(jnp.max(jnp.abs(deq - x)) / (jnp.max(jnp.abs(x)) + 1e-12))
     assert rel <= 1.0 / 127 + 1e-3  # one int8 bin of the block max
+
+
+@settings(max_examples=20, deadline=None, derandomize=True)
+@given(n=st.integers(min_value=1, max_value=4000),
+       mag=st.floats(min_value=1e-4, max_value=1e3),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_quantize_nearest_error_at_most_half_scale(n, mag, seed):
+    """rng=None selects round-to-nearest: per-element dequantization error
+    is bounded by scale/2 (one half of a quantization bin)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * mag
+    _, scale, deq = _quantize(x, 256, None)
+    bound = np.repeat(np.asarray(scale)[:, 0], 256)[:n] / 2
+    assert np.all(np.abs(np.asarray(deq - x)) <= bound * (1 + 1e-6) + 1e-12)
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(v=st.floats(min_value=0.05, max_value=0.95))
+def test_stochastic_rounding_unbiased_in_expectation(v):
+    """Fixed-seed mean test: E[deq] == x under stochastic rounding.  The
+    block max pins scale = 1.0, so every other element sits at fractional
+    bin position v and must round up with probability exactly v."""
+    x = jnp.concatenate([jnp.full((255,), v), jnp.full((1,), 127.0)])
+    seeds = jnp.arange(400, dtype=jnp.int32)
+    deqs = jax.vmap(lambda s: _quantize(x, 256, s)[2])(seeds)
+    mean = float(deqs[:, :255].mean())
+    assert abs(mean - v) < 8e-3  # 5 sigma of the 400x255-sample mean
+
+
+@settings(max_examples=20, deadline=None, derandomize=True)
+@given(n=st.integers(min_value=1, max_value=2000),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_error_feedback_residual_exactly_reconstructs(n, seed):
+    """Round-to-nearest residual is *exact* in fp32: deq != 0 implies
+    deq/2 <= |x| <= 2|deq| (Sterbenz), so x - deq carries no rounding and
+    dequant + residual reconstructs the fp32 input bit-for-bit — the
+    error-feedback loop loses nothing."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 3.0
+    _, _, deq = _quantize(x, 256, None)
+    resid = x - deq  # what the compressor stores as error feedback
+    np.testing.assert_array_equal(np.asarray(deq + resid), np.asarray(x))
