@@ -26,18 +26,17 @@ def _sophia_noclip(steps, k, lr=8e-4):
     Coordinates with tiny |h| now take updates ~ m/max(gamma*h, eps) —
     unbounded; the paper (Fig 8c) reports divergence at k >= 5."""
     src = bench_source()
-    init_fn, step, hess = make_train_fns(
+    init_fn, step = make_train_fns(
         GPT2_TINY, TrainerConfig(optimizer="sophia_g", peak_lr=lr,
                                  total_steps=steps, warmup_steps=2,
                                  hess_interval=k, hess_subbatch=4,
                                  grad_clip=1.0, clip_threshold=1e9))
     state = init_fn(jax.random.PRNGKey(0))
     step = jax.jit(step)
-    hess = jax.jit(hess)
     losses = []
     for t in range(steps):
         batch = {k2: jnp.asarray(v) for k2, v in src.batch_at(t).items()}
-        state, m = (hess if t % k == 0 else step)(state, batch)
+        state, m = step(state, batch, jnp.asarray(t % k == 0))
         losses.append(float(m["loss"]))
         if not np.isfinite(losses[-1]) or losses[-1] > 50:
             return losses, True

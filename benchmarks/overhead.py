@@ -2,13 +2,17 @@
 
 Paper: Sophia's Hessian refresh (every k=10 steps on a reduced sub-batch)
 adds <5% average wall-clock overhead vs AdamW and the same memory (two
-states).  We measure all optimizers' jitted steps on the same model, plus
-the amortized Hessian-step cost — every optimizer now runs through the
-flat-buffer engine, so the comparison is apples-to-apples by construction.
+states).  We measure every optimizer's UNIFIED jitted step — one compiled
+program whose refresh branch is gated by a traced flag — with the flag
+clear (hot path) and set (refresh path), and report the amortized overhead
+((k-1) * t_hot + t_refresh) / k against the paper's <5% target.  The jit
+cache size is asserted to stay at one program per optimizer: the refresh
+cadence must never trigger a second compilation.
 
 We also audit the step's lowered HLO: the engine keeps optimizer state as
-block-padded flat shards, so the hot step must contain NO per-leaf pad ops
-(the seed's per-step per-leaf flatten/pad/unpad round-trip is gone; the
+block-padded flat shards and the estimators emit flat shards directly, so
+the unified program — refresh branch included — must contain NO rank-1 pad
+ops (the seed's per-step per-leaf flatten/pad/unpad round-trip is gone; the
 single tail pad per shard is a constant operand of the ravel concatenate).
 """
 import time
@@ -18,9 +22,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.gpt2 import GPT2_TINY
+from repro.core import hessian_aware_optimizer
 from repro.train import TrainerConfig, make_engine, make_train_fns
 
 from .common import bench_source, csv_line
+
+AMORTIZED_TARGET_PCT = 5.0  # paper Section 4.3
 
 
 def _time(f, *args, n=20):
@@ -38,9 +45,9 @@ def _count_pads(fn, *args) -> int:
 
     The seed's per-leaf fused path padded every flat leaf (4 inputs + 2
     outputs per leaf, every step) — those show up as pads of rank-1
-    tensors.  The engine contract is zero of them: optimizer state is
-    block-padded once at init and the model's own activation pads are
-    rank>=2."""
+    tensors.  The engine contract is zero of them, refresh branch included:
+    optimizer state is block-padded once at init, estimates ravel once
+    through the layout, and the model's own activation pads are rank>=2."""
     import re
     txt = jax.jit(fn).lower(*args).as_text()
     return len(re.findall(r"stablehlo\.pad[^\n]*tensor<\d+xf32>", txt))
@@ -50,25 +57,33 @@ def main(quick=False):
     cfg = GPT2_TINY
     src = bench_source()
     batch = {k: jnp.asarray(v) for k, v in src.batch_at(0).items()}
+    off, on = jnp.asarray(False), jnp.asarray(True)
     results = {}
     for opt, est in (("adamw", "gnb"), ("sophia_g", "gnb"),
                      ("sophia_h", "hutchinson"), ("adahessian", "hutchinson"),
                      ("lion", "gnb")):
         tc = TrainerConfig(optimizer=opt, peak_lr=1e-3, total_steps=1000,
                            estimator=est, hess_subbatch=4, hess_interval=10)
-        init_fn, step, hess_step = make_train_fns(cfg, tc)
+        init_fn, step = make_train_fns(cfg, tc)
         state = init_fn(jax.random.PRNGKey(0))
-        t_step = _time(jax.jit(step), state, batch)
+        jstep = jax.jit(step)
+        t_step = _time(jstep, state, batch, off)
         row = {"t_step_ms": t_step * 1e3}
-        if opt.startswith("sophia") or opt == "adahessian":
-            t_hess = _time(jax.jit(hess_step), state, batch)
+        if hessian_aware_optimizer(opt):
+            t_hess = _time(jstep, state, batch, on)
             row["t_hess_step_ms"] = t_hess * 1e3
             k = tc.hess_interval if opt.startswith("sophia") else 1
             row["amortized_ms"] = (t_step * (k - 1) + t_hess) / k * 1e3
             row["overhead_vs_step_pct"] = 100 * (row["amortized_ms"]
                                                  / (t_step * 1e3) - 1)
+            row["meets_5pct_target"] = float(
+                row["overhead_vs_step_pct"] < AMORTIZED_TARGET_PCT)
+        # one program per optimizer: hot + refresh both hit the same cache
+        # entry (the flag is traced) — compile count > 1 is a regression
+        row["programs_compiled"] = jstep._cache_size()
+        assert row["programs_compiled"] == 1, row
         if opt == "sophia_g":
-            row["hlo_pad_ops"] = _count_pads(step, state, batch)
+            row["hlo_pad_ops"] = _count_pads(step, state, batch, on)
         results[opt] = row
         csv_line(f"overhead.{opt}", t_step * 1e6,
                  ";".join(f"{k2}={v:.2f}" for k2, v in row.items()))
@@ -76,7 +91,7 @@ def main(quick=False):
     # memory: Sophia state count == AdamW state count (m,h vs m,v), both
     # living as block-padded flat shards
     tc = TrainerConfig(optimizer="sophia_g", peak_lr=1e-3, total_steps=10)
-    init_fn, *_ = make_train_fns(cfg, tc)
+    init_fn, _ = make_train_fns(cfg, tc)
     s = init_fn(jax.random.PRNGKey(0))
     sophia_state = sum(x.size for x in jax.tree.leaves(s.opt_state.m)) + \
         sum(x.size for x in jax.tree.leaves(s.opt_state.h))

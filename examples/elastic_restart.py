@@ -8,7 +8,11 @@ the exact batches, so the final params match an uninterrupted run.
 """
 import os
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# append (not setdefault): the demo requires 8 simulated devices even when
+# the environment already carries XLA flags
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8"
+                           ).strip()
 
 import dataclasses
 import shutil
@@ -23,7 +27,7 @@ import numpy as np
 from repro.configs.gpt2 import GPT2_TINY
 from repro.data import DataConfig, make_source
 from repro.launch.mesh import make_mesh
-from repro.launch.train import compile_steps
+from repro.launch.train import compile_train_step
 from repro.models import get_model
 from repro.train import TrainerConfig, checkpoint as ckpt, make_engine
 from repro.train.elastic import run_resumable
@@ -53,8 +57,8 @@ def setup():
     n = len(ctx["devices"])
     mesh = make_mesh((n, 1), ("data", "model"), devices=ctx["devices"]) \
         if n > 1 else None
-    tjit, hjit, init_fn, ssh, bsh = compile_steps(cfg, tc, mesh, sample)
-    ctx.update(tjit=tjit, hjit=hjit, init_fn=init_fn, ssh=ssh, bsh=bsh)
+    sjit, init_fn, ssh, bsh = compile_train_step(cfg, tc, mesh, sample)
+    ctx.update(sjit=sjit, init_fn=init_fn, ssh=ssh, bsh=bsh)
 
 
 def make_state():
@@ -80,8 +84,8 @@ def run(state, start):
         batch = {k: jax.numpy.asarray(v) for k, v in src.batch_at(t).items()}
         if ctx["bsh"] is not None:
             batch = jax.device_put(batch, ctx["bsh"])
-        fn = ctx["hjit"] if t % tc.hess_interval == 0 else ctx["tjit"]
-        state, _ = fn(state, batch)
+        flag = jax.numpy.asarray(t % tc.hess_interval == 0)
+        state, _ = ctx["sjit"](state, batch, flag)
         if (t + 1) % 6 == 0 and t + 1 < TOTAL:
             ckpt.save(ckpt_dir, t + 1, state, extra=layout_meta)
             if ctx["crashes"] > 0 and len(ctx["devices"]) > 1:

@@ -13,14 +13,17 @@ Public API:
 from .types import (GradientTransformation, HessianAwareTransformation,
                     apply_updates, chain, global_norm, tree_zeros_like)
 from .sophia import (SophiaState, scale_by_sophia, sophia, sophia_g, sophia_h)
-from .estimators import (empirical_fisher_estimator, exact_diag_hessian,
+from .estimators import (empirical_fisher_estimator,
+                         empirical_fisher_estimator_flat,
+                         empirical_fisher_ghat_flat, exact_diag_hessian,
                          gnb_estimator, gnb_estimator_sq,
-                         hutchinson_estimator, sample_labels,
-                         subsample_batch)
+                         gnb_estimator_sq_flat, gnb_ghat_flat,
+                         hutchinson_estimator, hutchinson_estimator_flat,
+                         sample_labels, subsample_batch)
 from .baselines import adahessian, adamw, lion, sgd, signgd
 from .engine import (EngineState, OptimizerEngine, ShardLayout, build_layout,
-                     engine_partition_specs, flat_shard_spec, ravel_shards,
-                     unravel_shards)
+                     engine_partition_specs, flat_shard_spec,
+                     hessian_aware_optimizer, ravel_shards, unravel_shards)
 from .clipping import ClipState, clip_by_global_norm, clip_trigger_rate
 from .schedule import (constant, inverse_sqrt, linear_warmup_cosine,
                        linear_warmup_linear_decay)

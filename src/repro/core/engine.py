@@ -60,6 +60,14 @@ _CURVATURE_FAMILIES = ("sophia", "adamw", "adahessian")
 _HESSIAN_AWARE = ("sophia", "adahessian")
 
 
+def hessian_aware_optimizer(optimizer: str) -> bool:
+    """True for trainer-level optimizer names whose curvature refreshes
+    out-of-band (the Algorithm-3 cadence).  The single source of truth the
+    trainer / drivers / benchmarks consult for the refresh flag — never a
+    hardcoded optimizer-name tuple — without constructing an engine."""
+    return FAMILIES.get(optimizer) in _HESSIAN_AWARE
+
+
 # ---------------------------------------------------------------------------
 # Static layout
 
@@ -192,7 +200,10 @@ class OptimizerEngine:
                               clip_threshold=1.0), backend="pallas")
         opt_state = eng.init(params)
         params, opt_state = eng.step(opt_state, params, grads, lr)
-        # every k steps:
+        # unified pipeline: refresh fused into the step, flag traced
+        params, opt_state = eng.step_with_refresh(
+            opt_state, params, g_sh, lr, est_shards, scale, do_refresh)
+        # out-of-band form (tests/tooling):
         opt_state = eng.update_hessian(opt_state, est, scale=B, params=params)
     """
 
@@ -283,6 +294,13 @@ class OptimizerEngine:
         """:meth:`step` with the gradients already raveled to flat fp32
         shards (the trainer ravels once, optionally runs the in-collective
         compression on the flat view, then lands here)."""
+        return self._apply_shards(state, params, g_sh, lr,
+                                  None, None, None)
+
+    def _apply_shards(self, state: EngineState, params: PyTree, g_sh, lr,
+                      e_sh, flag, scale) -> tuple:
+        """Shared shard loop for the plain step (``e_sh is None``) and the
+        fused update+refresh (``e_sh``/``flag``/``scale`` set)."""
         lay = self.layout(params)
         lr = jnp.asarray(lr, jnp.float32)
         c1 = (state.count + 1).astype(jnp.float32)  # bias-correction step
@@ -291,8 +309,9 @@ class OptimizerEngine:
         nclip = jnp.zeros((), jnp.float32)
         for i in range(lay.n_shards):
             h_i = state.h[i] if self.needs_curvature else None
+            e_i = e_sh[i] if e_sh is not None else None
             p_i, m_i, h_i, nclip_i = self._step_shard(
-                p_sh[i], state.m[i], h_i, g_sh[i], lr, c1)
+                p_sh[i], state.m[i], h_i, g_sh[i], e_i, lr, c1, flag, scale)
             new_p.append(p_i)
             new_m.append(m_i)
             if h_i is not None:
@@ -301,14 +320,17 @@ class OptimizerEngine:
                 nclip = nclip + nclip_i.astype(jnp.float32)
         clip_fraction = (nclip / lay.n_params if self.tracks_clip_fraction
                          else state.clip_fraction)
+        kw = {} if flag is None else \
+            dict(hess_count=state.hess_count + flag.astype(jnp.int32))
         new_state = state._replace(
             count=state.count + 1, m=tuple(new_m),
             h=tuple(new_h) if new_h else state.h,
-            clip_fraction=jnp.asarray(clip_fraction, jnp.float32))
+            clip_fraction=jnp.asarray(clip_fraction, jnp.float32), **kw)
         return unravel_shards(lay, tuple(new_p)), new_state
 
-    def _step_shard(self, p, m, h, g, lr, c1):
-        """Dispatch one flat shard to the backend.  Returns
+    def _step_shard(self, p, m, h, g, e, lr, c1, flag, scale):
+        """Dispatch one flat shard to the backend — the plain update when
+        ``e`` is None, the fused update+refresh otherwise.  Returns
         (p', m', h' or None, n_clipped or None)."""
         hp = self.hypers
         fused = self.backend == "pallas"
@@ -318,12 +340,40 @@ class OptimizerEngine:
             args = dict(beta1=hp["beta1"], gamma=hp["gamma"], eps=hp["eps"],
                         weight_decay=hp["weight_decay"],
                         clip_threshold=hp["clip_threshold"])
+            if e is not None:
+                args["beta2"] = hp["beta2"]
+                if fused:
+                    p2, m2, h2, nclip = kblk.sophia_refresh_fused_block(
+                        p, m, h, g, e, lr, flag, scale, **args, **kw)
+                    return p2, m2, h2, jnp.sum(nclip)
+                p2, m2, h2, nclip = kref.sophia_step_refresh_ref(
+                    p, m, h, g, e, lr=lr, flag=flag, scale=scale, **args)
+                return p2, m2, h2, nclip
             if fused:
                 p2, m2, nclip = kblk.sophia_fused_block(p, m, h, g, lr,
                                                         **args, **kw)
                 return p2, m2, h, jnp.sum(nclip)
             p2, m2, nclip = kref.sophia_fused_ref(p, m, h, g, lr=lr, **args)
             return p2, m2, h, nclip
+        if fam == "adahessian":
+            args = dict(beta1=hp["beta1"], beta2=hp["beta2"], eps=hp["eps"],
+                        weight_decay=hp["weight_decay"])
+            if e is not None:
+                if fused:
+                    p2, m2, h2 = kblk.adahessian_refresh_fused_block(
+                        p, m, h, g, e, lr, flag, scale, c1, **args, **kw)
+                else:
+                    p2, m2, h2 = kref.adahessian_step_refresh_ref(
+                        p, m, h, g, e, lr=lr, flag=flag, scale=scale,
+                        step=c1, **args)
+                return p2, m2, h2, None
+            if fused:
+                p2, m2 = kblk.adahessian_fused_block(p, m, h, g, lr, c1,
+                                                     **args, **kw)
+            else:
+                p2, m2 = kref.adahessian_fused_ref(p, m, h, g, lr=lr,
+                                                   step=c1, **args)
+            return p2, m2, h, None
         if fam == "adamw":
             args = dict(beta1=hp["beta1"], beta2=hp["beta2"], eps=hp["eps"],
                         weight_decay=hp["weight_decay"])
@@ -334,16 +384,6 @@ class OptimizerEngine:
                 p2, m2, v2 = kref.adamw_fused_ref(p, m, h, g, lr=lr, step=c1,
                                                   **args)
             return p2, m2, v2, None
-        if fam == "adahessian":
-            args = dict(beta1=hp["beta1"], beta2=hp["beta2"], eps=hp["eps"],
-                        weight_decay=hp["weight_decay"])
-            if fused:
-                p2, m2 = kblk.adahessian_fused_block(p, m, h, g, lr, c1,
-                                                     **args, **kw)
-            else:
-                p2, m2 = kref.adahessian_fused_ref(p, m, h, g, lr=lr, step=c1,
-                                                   **args)
-            return p2, m2, h, None
         if fam == "lion":
             args = dict(beta1=hp["beta1"], beta2=hp["beta2"],
                         weight_decay=hp["weight_decay"])
@@ -368,20 +408,67 @@ class OptimizerEngine:
             return p2, m2, None, None
         raise ValueError(self.family)
 
-    # -- Hessian-EMA refresh (Algorithm 3 line 9) ---------------------------
+    # -- fused step + Hessian-EMA refresh (the unified curvature pipeline) --
 
-    def update_hessian(self, state: EngineState, est: PyTree, *,
+    def _est_shards(self, lay: ShardLayout, est) -> Tuple[jnp.ndarray, ...]:
+        """Estimate as flat fp32 shards: a tuple matching the layout passes
+        through untouched (the flat estimators' output — no params-shaped
+        curvature tree ever materializes); a pytree ravels once."""
+        if (isinstance(est, tuple) and len(est) == lay.n_shards
+                and all(getattr(e, "ndim", None) == 1
+                        and e.shape[0] == s
+                        for e, s in zip(est, lay.shard_sizes))):
+            return tuple(e.astype(jnp.float32) for e in est)
+        return ravel_shards(lay, est, dtype=jnp.float32)
+
+    def step_with_refresh(self, state: EngineState, params: PyTree,
+                          g_sh: Tuple[jnp.ndarray, ...], lr, est, scale,
+                          do_refresh) -> tuple:
+        """One optimizer step with the Hessian-EMA refresh fused in.
+
+        ``do_refresh`` is a *traced* 0/1 flag: when set, the curvature shard
+        absorbs ``scale * est`` (Algorithm 3 line 9) in the same grid sweep
+        that applies the update — h is read and written exactly once either
+        way, so the unified train step compiles to a single program whose
+        refresh branch adds no extra h traffic.  ``est`` is a tuple of flat
+        fp32 shards (or a pytree, raveled once); ``scale`` is the GNB batch
+        factor B, still a traced scalar.
+
+        Semantically identical to ``update_hessian(...)`` followed by
+        ``step_shards(...)`` when the flag is set, and to ``step_shards``
+        alone when clear (tests/test_unified_step.py pins both).
+
+        Returns ``(new_params, new_state)``."""
+        if not self.hessian_aware:
+            raise ValueError(
+                f"step_with_refresh requires a hessian-aware family, "
+                f"got {self.family!r} (use step/step_shards)")
+        flag = jnp.asarray(do_refresh).astype(jnp.float32)
+        scale = jnp.asarray(scale, jnp.float32)
+        e_sh = self._est_shards(self.layout(params), est)
+        return self._apply_shards(state, params, g_sh, lr, e_sh, flag, scale)
+
+    # -- Hessian-EMA refresh (Algorithm 3 line 9, out-of-band form) ---------
+
+    def update_hessian(self, state: EngineState, est, *,
                        scale=1.0, params: PyTree) -> EngineState:
         """Fold a fresh diagonal-Hessian estimate into the curvature shards.
 
-        ``scale`` is the GNB batch factor B (a traced scalar — it depends on
-        the step's valid-token mask), folded into the EMA in-kernel so the
-        scaled estimate never materializes.  AdaHessian squares the scaled
-        estimate (its state is an EMA of squared estimates)."""
+        ``est`` is either a params-shaped pytree (raveled once) or already a
+        tuple of flat fp32 shards in this engine's layout — the flat
+        estimators (core/estimators.py) hand shards in directly, so no
+        params-shaped curvature tree materializes.  ``scale`` is the GNB
+        batch factor B (a traced scalar — it depends on the step's
+        valid-token mask), folded into the EMA in-kernel so the scaled
+        estimate never materializes.  AdaHessian squares the scaled
+        estimate (its state is an EMA of squared estimates).
+
+        The unified train step fuses this into :meth:`step_with_refresh`;
+        this standalone form remains for tests and offline tooling."""
         if not self.hessian_aware:
             return state
         lay = self.layout(params)
-        e_sh = ravel_shards(lay, est, dtype=jnp.float32)
+        e_sh = self._est_shards(lay, est)
         beta2 = self.hypers["beta2"]
         square = self.family == "adahessian"
         new_h = []

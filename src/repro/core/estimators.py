@@ -17,6 +17,15 @@ computations:
 Both take a ``loss_fn``/``logits_fn`` over a (possibly reduced) estimator
 sub-batch — the paper uses 32 of 480 examples for Sophia-H and 240 of 480 for
 Sophia-G (Section 3.1) to keep amortized overhead ~5%.
+
+Each estimator also has a ``*_flat`` twin that emits the estimate directly as
+the optimizer engine's flat fp32 shards (one ravel through the static
+:class:`~repro.core.engine.ShardLayout`, the tail pad a constant operand of
+the concatenate): the unified train step's refresh branch consumes these, so
+no params-shaped curvature tree — and no per-leaf pad/unpad — ever
+materializes between the estimator gradient and the fused Hessian-EMA.
+Hutchinson's flat form draws its probe per flat shard (one key split per
+shard instead of per leaf).
 """
 from __future__ import annotations
 
@@ -50,24 +59,45 @@ def hutchinson_estimator(
     return jax.tree.map(lambda u_, hv: (u_ * hv).astype(jnp.float32), u, hvp)
 
 
+def hutchinson_estimator_flat(
+    loss_fn: Callable[[PyTree], jnp.ndarray],
+    params: PyTree,
+    rng: jax.Array,
+    layout,
+) -> Tuple[jnp.ndarray, ...]:
+    """:func:`hutchinson_estimator` emitting flat fp32 shards.
+
+    The probe ``u`` is drawn per flat shard (``layout.n_shards`` key splits,
+    typically one) and unraveled through the layout's static slices for the
+    HVP tangent — padded tail elements carry probe noise but the raveled
+    ``u * (H u)`` zeroes them again (the ravel's pad operand is zero), so
+    the pad region stays a fixed point of the Hessian-EMA."""
+    keys = jax.random.split(rng, layout.n_shards)
+    from .engine import ravel_shards, unravel_shards
+    u_sh = tuple(jax.random.normal(k, (s,), jnp.float32)
+                 for k, s in zip(keys, layout.shard_sizes))
+    u = unravel_shards(layout, u_sh)  # casts to leaf dtypes (tangent rule)
+    _, hvp = jax.jvp(jax.grad(loss_fn), (params,), (u,))
+    prod = jax.tree.map(
+        lambda u_, hv: u_.astype(jnp.float32) * hv.astype(jnp.float32),
+        u, hvp)
+    return ravel_shards(layout, prod, dtype=jnp.float32)
+
+
 def sample_labels(logits: jnp.ndarray, rng: jax.Array) -> jnp.ndarray:
     """yhat ~ Categorical(softmax(logits)) via Gumbel-max (fused on TPU)."""
     return jax.random.categorical(rng, logits, axis=-1)
 
 
-def gnb_estimator_sq(
+def _gnb_ghat(
     logits_fn: Callable[[PyTree], jnp.ndarray],
     params: PyTree,
     rng: jax.Array,
-    *,
-    mask: jnp.ndarray | None = None,
+    mask: jnp.ndarray | None,
 ) -> Tuple[PyTree, jnp.ndarray]:
-    """GNB pieces: ``(ghat (*) ghat, B)`` with the batch scale unfolded.
-
-    The optimizer engine folds ``B`` into the Hessian-EMA kernel
-    (h' = b2 h + (1-b2) B ghat^2), so ``B * ghat^2`` never materializes as a
-    separate buffer.  ``B`` is traced when ``mask`` is given (it counts the
-    step's valid positions)."""
+    """Shared GNB core: ``(ghat, B)`` — the mini-batch gradient of the mean
+    CE against the model's *sampled* labels, and the batch factor B (traced
+    when ``mask`` is given: it counts the step's valid positions)."""
 
     def sampled_loss(p) -> jnp.ndarray:
         logits = logits_fn(p)
@@ -87,10 +117,64 @@ def gnb_estimator_sq(
         for s in shape[:-1]:
             batch_size *= s
         batch_size = jnp.asarray(batch_size, jnp.float32)
-    ghat = jax.grad(sampled_loss)(params)
+    return jax.grad(sampled_loss)(params), batch_size
+
+
+def gnb_estimator_sq(
+    logits_fn: Callable[[PyTree], jnp.ndarray],
+    params: PyTree,
+    rng: jax.Array,
+    *,
+    mask: jnp.ndarray | None = None,
+) -> Tuple[PyTree, jnp.ndarray]:
+    """GNB pieces: ``(ghat (*) ghat, B)`` with the batch scale unfolded.
+
+    The optimizer engine folds ``B`` into the Hessian-EMA kernel
+    (h' = b2 h + (1-b2) B ghat^2), so ``B * ghat^2`` never materializes as a
+    separate buffer.  ``B`` is traced when ``mask`` is given (it counts the
+    step's valid positions)."""
+    ghat, batch_size = _gnb_ghat(logits_fn, params, rng, mask)
     sq = jax.tree.map(
         lambda g: g.astype(jnp.float32) * g.astype(jnp.float32), ghat)
     return sq, batch_size
+
+
+def gnb_ghat_flat(
+    logits_fn: Callable[[PyTree], jnp.ndarray],
+    params: PyTree,
+    rng: jax.Array,
+    layout,
+    *,
+    mask: jnp.ndarray | None = None,
+) -> Tuple[Tuple[jnp.ndarray, ...], jnp.ndarray]:
+    """GNB pieces *before* squaring, as flat fp32 shards: ``(ghat, B)``.
+
+    This is the quantity a data-parallel estimator reduction puts on the
+    wire — the refresh-path int8 compression must quantize ``ghat``, not
+    ``ghat^2`` (squaring first squares the per-block dynamic range, zeroing
+    every coordinate below ~max/16 of its scale block instead of ~max/254).
+    """
+    from .engine import ravel_shards
+    ghat, batch_size = _gnb_ghat(logits_fn, params, rng, mask)
+    return ravel_shards(layout, ghat, dtype=jnp.float32), batch_size
+
+
+def gnb_estimator_sq_flat(
+    logits_fn: Callable[[PyTree], jnp.ndarray],
+    params: PyTree,
+    rng: jax.Array,
+    layout,
+    *,
+    mask: jnp.ndarray | None = None,
+) -> Tuple[Tuple[jnp.ndarray, ...], jnp.ndarray]:
+    """:func:`gnb_estimator_sq` emitting flat fp32 shards: ``ghat`` ravels
+    once through the engine layout and squares in flat space (one fused
+    element-wise op per shard), so the estimate never exists as a
+    params-shaped pytree.  Returns ``(shards, B)`` with B unfolded for the
+    fused Hessian-EMA."""
+    g_sh, batch_size = gnb_ghat_flat(logits_fn, params, rng, layout,
+                                     mask=mask)
+    return tuple(g * g for g in g_sh), batch_size
 
 
 def gnb_estimator(
@@ -129,6 +213,32 @@ def empirical_fisher_estimator(
     g = jax.grad(loss_fn)(params)
     return jax.tree.map(
         lambda g_: batch_size * g_.astype(jnp.float32) * g_.astype(jnp.float32), g)
+
+
+def empirical_fisher_ghat_flat(
+    loss_fn: Callable[[PyTree], jnp.ndarray],
+    params: PyTree,
+    layout,
+) -> Tuple[jnp.ndarray, ...]:
+    """The E-F gradient (TRUE labels) as flat fp32 shards, pre-squaring —
+    the wire form for the refresh-path compression (see
+    :func:`gnb_ghat_flat` for why the square must come after)."""
+    from .engine import ravel_shards
+    return ravel_shards(layout, jax.grad(loss_fn)(params),
+                        dtype=jnp.float32)
+
+
+def empirical_fisher_estimator_flat(
+    loss_fn: Callable[[PyTree], jnp.ndarray],
+    params: PyTree,
+    layout,
+) -> Tuple[jnp.ndarray, ...]:
+    """:func:`empirical_fisher_estimator` emitting flat fp32 shards of
+    ``g (*) g`` with the batch factor B *unfolded* — the caller passes B as
+    the fused Hessian-EMA's traced ``scale`` (exactly like the GNB path)
+    instead of pre-multiplying a params-shaped tree."""
+    g_sh = empirical_fisher_ghat_flat(loss_fn, params, layout)
+    return tuple(g_ * g_ for g_ in g_sh)
 
 
 def exact_diag_hessian(

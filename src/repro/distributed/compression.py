@@ -106,7 +106,8 @@ def _quantize(x, block: int, rng=None, *, offset=0):
     shaped like x)."""
     flat = x.reshape(-1)
     pad = (-flat.size) % block
-    flat = jnp.pad(flat, (0, pad))
+    if pad:  # engine shards are block multiples: keep their HLO pad-free
+        flat = jnp.pad(flat, (0, pad))
     blocks = flat.reshape(-1, block)
     scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
     scale = jnp.maximum(scale, 1e-12)
@@ -167,11 +168,31 @@ class GradCompressor:
         seed = _as_seed(rng)
         out_g, out_e = [], []
         for i, (g, e) in enumerate(zip(g_shards, state.error)):
-            sseed = seed ^ jnp.uint32((_GOLDEN * (i + 1)) & 0xFFFFFFFF)
+            # rng None selects deterministic round-to-nearest (see
+            # _quantize) — preserve it instead of xor-ing into a crash
+            sseed = None if seed is None else \
+                seed ^ jnp.uint32((_GOLDEN * (i + 1)) & 0xFFFFFFFF)
             deq, err = self._allreduce_one(g, e, sseed, mesh, axis)
             out_g.append(deq)
             out_e.append(err)
         return tuple(out_g), FlatCompressionState(error=tuple(out_e))
+
+    def allreduce_shards_stateless(self, g_shards, rng, *, mesh=None,
+                                   axis=None) -> Tuple[jnp.ndarray, ...]:
+        """Compressed reduction over flat shards WITHOUT error feedback.
+
+        The Hessian-refresh path uses this for the estimator sub-batch
+        gradient: at 1/k refresh sparsity a residual carried between
+        refreshes would contribute O((1-beta2)/k) of EMA mass — noise-level
+        next to the stochastic-rounding unbiasedness already in
+        ``_quantize`` — and persisting one more params-sized buffer in
+        TrainState isn't worth that.  Same wire representation and
+        device-count invariance as :meth:`allreduce_shards`."""
+        zero = FlatCompressionState(error=tuple(
+            jnp.zeros(g.shape, jnp.float32) for g in g_shards))
+        deq, _ = self.allreduce_shards(g_shards, zero, rng, mesh=mesh,
+                                       axis=axis)
+        return deq
 
     def _allreduce_one(self, g, e, seed, mesh, axis):
         n = g.shape[0]
@@ -196,7 +217,9 @@ class GradCompressor:
             for a in axes:
                 idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
             x = g_seg.astype(jnp.float32) + e_seg
-            q, scale, deq = _quantize(x, block, sd, offset=idx * seg)
+            q, scale, deq = _quantize(x, block,
+                                      None if seed is None else sd,
+                                      offset=idx * seg)
             # int8 payload + fp32 scales are what cross the wire
             q_all = jax.lax.all_gather(q.reshape(-1), axes[0] if
                                        len(axes) == 1 else axes, tiled=True)
@@ -207,8 +230,9 @@ class GradCompressor:
             return full, x - deq
 
         spec = P(axes if len(axes) > 1 else axes[0])
+        sd = jnp.uint32(0) if seed is None else seed  # placeholder operand
         return shard_map(body, mesh=mesh, in_specs=(spec, spec, P()),
-                         out_specs=(P(), spec), check_rep=False)(g, e, seed)
+                         out_specs=(P(), spec), check_rep=False)(g, e, sd)
 
     # -- legacy params-pytree path (mesh-agnostic simulation) ----------------
 

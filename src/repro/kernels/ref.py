@@ -42,6 +42,43 @@ def hessian_ema_ref(h, hhat, *, beta2, scale=1.0, square=False):
     return out.astype(h.dtype)
 
 
+def sophia_step_refresh_ref(p, m, h, g, e, *, lr, flag, scale, beta1, beta2,
+                            gamma, eps, weight_decay, clip_threshold=1.0):
+    """Fused Sophia step + conditional Hessian-EMA refresh on one tensor.
+
+    ``flag`` is a traced 0/1 scalar (the unified train step's refresh flag):
+    when set, h first absorbs the estimate (Algorithm 3 line 9, ``scale``
+    folding the GNB batch factor B in) and the update then reads the
+    refreshed h — exactly ``hessian_ema_ref`` followed by
+    ``sophia_fused_ref``, with h touched once.  When clear, h passes
+    through unchanged and the estimate operand is dead.
+
+    Returns (new_p, new_m, new_h, n_clipped)."""
+    h1 = hessian_ema_ref(h, e, beta2=beta2, scale=scale, square=False)
+    on = jnp.asarray(flag, jnp.float32) > 0.5
+    h_sel = jnp.where(on, h1, h)
+    p2, m2, nclip = sophia_fused_ref(
+        p, m, h_sel, g, lr=lr, beta1=beta1, gamma=gamma, eps=eps,
+        weight_decay=weight_decay, clip_threshold=clip_threshold)
+    return p2, m2, h_sel, nclip
+
+
+def adahessian_step_refresh_ref(p, m, v, g, e, *, lr, flag, scale, beta1,
+                                beta2, eps, weight_decay, step):
+    """AdaHessian step + conditional squared-estimate EMA refresh.
+
+    The refresh is ``hessian_ema_ref(square=True)`` — v is an EMA of
+    (scale * estimate)^2 — selected by the traced ``flag`` exactly like
+    :func:`sophia_step_refresh_ref`.  Returns (new_p, new_m, new_v)."""
+    v1 = hessian_ema_ref(v, e, beta2=beta2, scale=scale, square=True)
+    on = jnp.asarray(flag, jnp.float32) > 0.5
+    v_sel = jnp.where(on, v1, v)
+    p2, m2 = adahessian_fused_ref(p, m, v_sel, g, lr=lr, beta1=beta1,
+                                  beta2=beta2, eps=eps,
+                                  weight_decay=weight_decay, step=step)
+    return p2, m2, v_sel
+
+
 def flash_attention_ref(q, k, v, *, causal=True, scale=None):
     """Plain softmax attention oracle for the flash kernel.
 

@@ -112,6 +112,105 @@ def hessian_ema_block(h, est, *, beta2, scale=1.0, square=False, block=BLOCK,
     )(jnp.asarray(scale, _f32).reshape(1), h, est)
 
 
+def _sophia_refresh_kernel(sc_ref, p_ref, m_ref, h_ref, g_ref, e_ref,
+                           p_out, m_out, h_out, nclip_out, *,
+                           beta1, beta2, gamma, eps, weight_decay,
+                           clip_threshold):
+    lr, flag, scale = sc_ref[0], sc_ref[1], sc_ref[2]
+    h32 = h_ref[...].astype(_f32)
+    h_upd = beta2 * h32 + (1.0 - beta2) * (scale * e_ref[...].astype(_f32))
+    # storage-dtype roundtrip before the update reads h: the two-pass path
+    # (hessian_ema_block writes h, sophia_fused_block re-reads it) rounds
+    # through h's dtype, and the fused sweep must be bit-compatible with it
+    h_new = jnp.where(flag > 0.5, h_upd, h32).astype(h_out.dtype)
+    h_out[...] = h_new
+    m = beta1 * m_ref[...].astype(_f32) + (1.0 - beta1) * g_ref[...].astype(_f32)
+    raw = m / jnp.maximum(gamma * h_new.astype(_f32), eps)
+    u = jnp.clip(raw, -clip_threshold, clip_threshold)
+    p_out[...] = (p_ref[...].astype(_f32) * (1.0 - lr * weight_decay)
+                  - lr * u).astype(p_out.dtype)
+    m_out[...] = m.astype(m_out.dtype)
+    nclip_out[0] = jnp.sum((jnp.abs(raw) >= clip_threshold)
+                           .astype(jnp.int32))
+
+
+def sophia_refresh_fused_block(p, m, h, g, e, lr, flag, scale, *,
+                               beta1, beta2, gamma, eps, weight_decay,
+                               clip_threshold=1.0, block=BLOCK,
+                               interpret=True):
+    """One grid sweep fusing the Hessian-EMA refresh into the Sophia step.
+
+    ``flag`` (traced 0/1) selects whether h absorbs ``scale * e`` before the
+    update reads it — h streams through VMEM exactly once either way, which
+    is what makes the unified train step's refresh branch free of a second
+    h read/write pass.  ``scale`` is the GNB batch factor B (traced).
+
+    Returns (p', m', h', nclip per block)."""
+    n = p.shape[0]
+    grid = n // block
+    scalars = jnp.stack([jnp.asarray(lr, _f32), jnp.asarray(flag, _f32),
+                         jnp.asarray(scale, _f32)])
+    kern = functools.partial(
+        _sophia_refresh_kernel, beta1=beta1, beta2=beta2, gamma=gamma,
+        eps=eps, weight_decay=weight_decay, clip_threshold=clip_threshold)
+    spec = _grid_spec(block)
+    return pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[_scalar_spec(3), spec, spec, spec, spec, spec],
+        out_specs=[spec, spec, spec, pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), p.dtype),
+                   jax.ShapeDtypeStruct((n,), m.dtype),
+                   jax.ShapeDtypeStruct((n,), h.dtype),
+                   jax.ShapeDtypeStruct((grid,), jnp.int32)],
+        interpret=interpret,
+    )(scalars, p, m, h, g, e)
+
+
+def _adahessian_refresh_kernel(sc_ref, p_ref, m_ref, v_ref, g_ref, e_ref,
+                               p_out, m_out, v_out, *,
+                               beta1, beta2, eps, weight_decay):
+    lr, flag, scale = sc_ref[0], sc_ref[1], sc_ref[2]
+    bc1, bc2 = sc_ref[3], sc_ref[4]
+    v32 = v_ref[...].astype(_f32)
+    es = scale * e_ref[...].astype(_f32)
+    v_upd = beta2 * v32 + (1.0 - beta2) * es * es
+    v_new = jnp.where(flag > 0.5, v_upd, v32).astype(v_out.dtype)
+    v_out[...] = v_new
+    m = beta1 * m_ref[...].astype(_f32) + (1.0 - beta1) * g_ref[...].astype(_f32)
+    u = (m / bc1) / (jnp.sqrt(v_new.astype(_f32) / bc2) + eps)
+    p_out[...] = (p_ref[...].astype(_f32) * (1.0 - lr * weight_decay)
+                  - lr * u).astype(p_out.dtype)
+    m_out[...] = m.astype(m_out.dtype)
+
+
+def adahessian_refresh_fused_block(p, m, v, g, e, lr, flag, scale, step, *,
+                                   beta1, beta2, eps, weight_decay,
+                                   block=BLOCK, interpret=True):
+    """AdaHessian step with the squared-estimate EMA fused in (flag-gated),
+    the refresh analogue of :func:`sophia_refresh_fused_block`."""
+    n = p.shape[0]
+    grid = n // block
+    step = jnp.asarray(step, _f32)
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    scalars = jnp.stack([jnp.asarray(lr, _f32), jnp.asarray(flag, _f32),
+                         jnp.asarray(scale, _f32), bc1, bc2])
+    kern = functools.partial(_adahessian_refresh_kernel, beta1=beta1,
+                             beta2=beta2, eps=eps, weight_decay=weight_decay)
+    spec = _grid_spec(block)
+    return pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[_scalar_spec(5), spec, spec, spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((n,), p.dtype),
+                   jax.ShapeDtypeStruct((n,), m.dtype),
+                   jax.ShapeDtypeStruct((n,), v.dtype)],
+        interpret=interpret,
+    )(scalars, p, m, v, g, e)
+
+
 # ---------------------------------------------------------------------------
 # Baselines (the paper's Table 1 comparison runs through identical machinery)
 

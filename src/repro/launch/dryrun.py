@@ -73,16 +73,20 @@ def lower_cell(arch: str, shape_name: str, mesh, *, opt: str = "sophia_g",
         tc = TrainerConfig(optimizer=opt, remat=remat, attn_impl=attn_impl,
                            total_steps=100_000, grad_accum=grad_accum,
                            state_dtype=state_dtype)
-        init_fn, train_step, _hess = make_train_fns(cfg, tc)
+        init_fn, train_step = make_train_fns(cfg, tc)
         state_shape = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
         pspecs = partition_params(state_shape.params, mesh, fsdp=fsdp)
         sspecs = state_partition_specs(state_shape, pspecs, mesh)
         bspecs = batch_specs(cell.specs["batch"], mesh)
+        # the unified step carries the traced refresh flag: one lowered
+        # program covers both the hot path and the cond'd estimator branch
         jf = jax.jit(train_step,
-                     in_shardings=(_ns(mesh, sspecs), _ns(mesh, bspecs)),
+                     in_shardings=(_ns(mesh, sspecs), _ns(mesh, bspecs),
+                                   None),
                      out_shardings=(_ns(mesh, sspecs), None),
                      donate_argnums=(0,) if donate else ())
-        lowered = jf.lower(state_shape, cell.specs["batch"])
+        lowered = jf.lower(state_shape, cell.specs["batch"],
+                           jax.ShapeDtypeStruct((), jnp.bool_))
         return lowered, {"cfg": cfg, "kind": "train"}
 
     # serving cells use bf16 weights.  TP-only sharding (weights replicated

@@ -62,22 +62,26 @@ def _final_save(ckpt_dir, step, state, extra):
         ckpt.save(ckpt_dir, step, state, extra=extra)
 
 
-def compile_steps(cfg, tc, mesh, sample_batch, state_shape=None):
-    """Jit the train/hess steps for ``mesh`` (explicit shardings + buffer
-    donation) and return (train_step, hess_step, init_fn, state_shardings,
+def compile_train_step(cfg, tc, mesh, sample_batch, state_shape=None):
+    """Jit THE train step for ``mesh`` (explicit shardings + buffer
+    donation) and return (train_step, init_fn, state_shardings,
     batch_shardings) — state/batch shardings are None on a mesh-less run.
+
+    One program per mesh configuration: the Hessian refresh is a traced
+    flag inside ``train_step(state, batch, do_refresh)``, so the elastic
+    driver's per-device-set compile cache holds a single XLA executable
+    where it used to hold a hot step *and* a refresh step.
 
     ``state_shape`` (an eval_shape of init_fn, mesh-independent) can be
     passed in to avoid re-tracing the model abstractly."""
-    init_fn, train_step, hess_step = make_train_fns(cfg, tc)
+    init_fn, train_step = make_train_fns(cfg, tc)
     # donate the TrainState: the flat params/m/h shards alias input->output,
     # halving optimizer-state peak memory (CPU has no donation; skip the
     # warning noise there)
     dn = (0,) if jax.default_backend() != "cpu" else ()
     set_activation_mesh(mesh)
     if mesh is None:
-        return (jax.jit(train_step, donate_argnums=dn),
-                jax.jit(hess_step, donate_argnums=dn), init_fn, None, None)
+        return jax.jit(train_step, donate_argnums=dn), init_fn, None, None
     if state_shape is None:
         state_shape = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
     pspecs = partition_params(state_shape.params, mesh, fsdp=True)
@@ -86,9 +90,7 @@ def compile_steps(cfg, tc, mesh, sample_batch, state_shape=None):
                                 is_leaf=lambda x: isinstance(x, P))
     ssh = ns(sspecs)
     bsh = ns(batch_specs(sample_batch, mesh))
-    return (jax.jit(train_step, in_shardings=(ssh, bsh),
-                    out_shardings=(ssh, None), donate_argnums=dn),
-            jax.jit(hess_step, in_shardings=(ssh, bsh),
+    return (jax.jit(train_step, in_shardings=(ssh, bsh, None),
                     out_shardings=(ssh, None), donate_argnums=dn),
             init_fn, ssh, bsh)
 
@@ -113,6 +115,10 @@ def main(argv=None):
     ap.add_argument("--fused-kernel", action="store_true")
     ap.add_argument("--compress-grads", action="store_true",
                     help="in-collective int8 all-reduce over the fsdp axis")
+    ap.add_argument("--compress-hess", action="store_true",
+                    help="int8-compress the estimator sub-batch gradient "
+                         "too (stateless: no error feedback at refresh "
+                         "sparsity)")
     ap.add_argument("--state-dtype", default="float32",
                     choices=["float32", "bfloat16"])
     ap.add_argument("--ckpt-dir", default=None)
@@ -141,6 +147,7 @@ def main(argv=None):
         hess_interval=args.hess_interval, hess_subbatch=args.hess_subbatch,
         grad_accum=args.grad_accum, remat=args.remat,
         fused_kernel=args.fused_kernel, compress_grads=args.compress_grads,
+        compress_hess=args.compress_hess,
         state_dtype=args.state_dtype, seed=args.seed)
     src = make_source(DataConfig(
         seq_len=args.seq_len, global_batch=args.global_batch,
@@ -155,7 +162,8 @@ def main(argv=None):
     # unravel spec without the code).
     state_shape = jax.eval_shape(make_train_fns(cfg, tc)[0],
                                  jax.random.PRNGKey(args.seed))
-    layout_meta = dict(make_engine(tc).describe(state_shape.params),
+    engine = make_engine(tc)
+    layout_meta = dict(engine.describe(state_shape.params),
                        optimizer=args.opt, state_dtype=args.state_dtype,
                        compress_grads=bool(args.compress_grads))
 
@@ -164,16 +172,17 @@ def main(argv=None):
            else all_devices}
 
     def setup():
-        """(Re)build mesh + jitted steps for the current device set.  A
-        retry on an unchanged device set (transient failure, no degrade)
-        keeps the compiled steps — retraces cost minutes on real models."""
+        """(Re)build mesh + the single jitted step for the current device
+        set.  A retry on an unchanged device set (transient failure, no
+        degrade) keeps the compiled step — retraces cost minutes on real
+        models."""
         key = tuple(ctx["devices"])
         if ctx.get("setup_key") == key:
             return
         mesh = build_mesh(ctx["devices"])
-        tjit, hjit, init_fn, ssh, bsh = compile_steps(cfg, tc, mesh, sample,
-                                                      state_shape=state_shape)
-        ctx.update(mesh=mesh, tjit=tjit, hjit=hjit, init_fn=init_fn,
+        sjit, init_fn, ssh, bsh = compile_train_step(cfg, tc, mesh, sample,
+                                                     state_shape=state_shape)
+        ctx.update(mesh=mesh, sjit=sjit, init_fn=init_fn,
                    ssh=ssh, bsh=bsh, setup_key=key)
 
     def make_state():
@@ -208,7 +217,10 @@ def main(argv=None):
         return state, start
 
     guard = PreemptionGuard()
-    needs_hess = args.opt in ("sophia_g", "sophia_h", "adahessian")
+    # the engine knows which families refresh curvature out-of-band (no
+    # hardcoded optimizer-name tuple: a new curvature family would have
+    # silently skipped its refresh cadence)
+    needs_hess = engine.hessian_aware
 
     def run(state, start):
         straggler = StragglerDetector()
@@ -218,9 +230,8 @@ def main(argv=None):
             batch = {k: jnp.asarray(v) for k, v in src.batch_at(t).items()}
             if ctx["bsh"] is not None:
                 batch = jax.device_put(batch, ctx["bsh"])
-            fn = ctx["hjit"] if (needs_hess and t % tc.hess_interval == 0) \
-                else ctx["tjit"]
-            state, metrics = fn(state, batch)
+            flag = jnp.asarray(needs_hess and t % tc.hess_interval == 0)
+            state, metrics = ctx["sjit"](state, batch, flag)
             dt = time.time() - t0
             if straggler.observe(dt):
                 print(f"[straggler] step {t} took {dt:.2f}s "

@@ -1,24 +1,33 @@
-"""Training loop: two jitted steps (plain / hessian-refresh), Algorithm 3.
+"""Training loop: ONE jitted step, Algorithm 3 under a traced refresh flag.
 
-The host alternates:
+The host calls a single compiled ``train_step(state, batch, do_refresh)``
+every step and flips the flag at the Hessian cadence (t % k == 0).  The
+estimator sub-graph — and the optimizer dispatch — live inside the step
+under ``lax.cond``: the refresh branch draws the diagonal-Hessian estimate
+(GNB / Hutchinson / empirical-Fisher) on the reduced sub-batch directly as
+the engine's flat fp32 shards and folds its EMA into the *same* Pallas
+grid sweep that applies the update (``engine.step_with_refresh`` — h read
+and written exactly once); the other branch is the ordinary fused step, so
+the hot path's HBM traffic is byte-identical to a never-refreshing run.
+Because the flag is traced there is exactly one XLA program per mesh
+configuration — the elastic driver no longer compiles and caches a hot
+step *and* a refresh step.
 
-    t % k == 0  ->  train_step_hess   (grad step + Hessian-EMA refresh on a
-                                       reduced estimator sub-batch)
-    otherwise   ->  train_step        (grad step only)
+Every step shares:
+  grad accumulation (microbatch scan, aux metrics ride the carry) ->
+  global-norm clip (threshold 1.0, trigger telemetry) -> ravel to flat fp32
+  shards -> [optional in-collective int8 compression over the fsdp axis,
+  error feedback persisted as flat shards] -> fused engine update
+  (+ flag-gated Hessian-EMA refresh; the estimator sub-batch gradient can
+  optionally ride the same int8 collective, stateless — no error feedback
+  at refresh sparsity).
 
-keeping the hot step's HLO free of estimator code (clean rooflines, and the
-levanter-style production structure).  Both steps share:
-  grad accumulation (microbatch scan) -> global-norm clip (threshold 1.0,
-  trigger telemetry) -> ravel to flat fp32 shards -> [optional in-collective
-  int8 compression over the fsdp axis, error feedback persisted as flat
-  shards] -> flat-buffer optimizer engine step.
-
-The optimizer update itself is one ``engine.step(state, grads, lr)`` call
-for *every* optimizer: the engine (core/engine.py) keeps m/h as flat
-dtype-homogeneous shards and executes the whole update as a single fused
-Pallas grid sweep per shard (``fused_kernel=True``) or the identical-layout
-pure-jnp reference.  The LR schedule is evaluated once per step and handed
-to the engine as a traced scalar.
+The optimizer update itself is one engine call for *every* optimizer: the
+engine (core/engine.py) keeps m/h as flat dtype-homogeneous shards and
+executes the whole update as a single fused Pallas grid sweep per shard
+(``fused_kernel=True``) or the identical-layout pure-jnp reference.  The
+LR schedule is evaluated once per step and handed to the engine as a
+traced scalar; the GNB batch factor B stays a traced scalar too.
 """
 from __future__ import annotations
 
@@ -29,14 +38,27 @@ import jax
 import jax.numpy as jnp
 
 from ..core import (OptimizerEngine, clip_by_global_norm,
-                    empirical_fisher_estimator, gnb_estimator_sq,
-                    hutchinson_estimator, linear_warmup_cosine, constant,
-                    subsample_batch)
+                    empirical_fisher_ghat_flat, gnb_ghat_flat,
+                    hessian_aware_optimizer, hutchinson_estimator_flat,
+                    linear_warmup_cosine, constant, subsample_batch)
 from ..distributed.compression import GradCompressor
 from ..models import ModelConfig, get_model
 from .train_state import TrainState
 
 PyTree = Any
+
+# Per-purpose RNG stream tags.  Every consumer derives its stream as
+# fold_in(fold_in(rng, TAG), step) — never an arithmetic offset of the bare
+# step: the old ``step + (1 << 20)`` compression offset collided with the
+# estimator stream as soon as step >= 2**20.
+RNG_TAG_HESS = 1           # estimator label sampling / probe draws
+RNG_TAG_COMPRESS = 2       # gradient-compression stochastic rounding
+RNG_TAG_HESS_COMPRESS = 3  # estimator-compression stochastic rounding
+
+
+def _fold_rng(state: TrainState, tag: int) -> jax.Array:
+    """Domain-separated per-step stream: (purpose tag, then step)."""
+    return jax.random.fold_in(jax.random.fold_in(state.rng, tag), state.step)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +83,9 @@ class TrainerConfig:
     attn_impl: str = "auto"
     fused_kernel: bool = False         # Pallas backend for the engine
     compress_grads: bool = False       # int8 + error feedback (beyond-paper)
+    compress_hess: bool = False        # int8 for the estimator sub-batch
+    #                                    gradient too (stateless: no error
+    #                                    feedback at refresh sparsity)
     state_dtype: str = "float32"       # optimizer m/h dtype ("bfloat16" at 400B)
     seed: int = 0
 
@@ -103,7 +128,12 @@ def make_engine(tc: TrainerConfig) -> OptimizerEngine:
 
 
 def _accum_grads(loss_fn, params, batch, accum: int):
-    """Microbatch gradient accumulation via scan (mean over microbatches)."""
+    """Microbatch gradient accumulation via scan (mean over microbatches).
+
+    Aux metrics ride the scan carry alongside the loss and grads, so
+    ``grad_accum > 1`` reports the same (averaged) metrics as
+    ``grad_accum == 1`` — the old carry kept only the final microbatch's ce
+    and zeroed aux, silently skewing logged metrics with accumulation on."""
     if accum <= 1:
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, batch)
@@ -112,30 +142,41 @@ def _accum_grads(loss_fn, params, batch, accum: int):
     micro = jax.tree.map(
         lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
         batch)
+    met0 = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        jax.eval_shape(loss_fn, params,
+                       jax.tree.map(lambda x: x[0], micro))[1])
 
     def body(carry, mb):
-        loss_acc, g_acc = carry
-        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        loss_acc, met_acc, g_acc = carry
+        (loss, met), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
         return (loss_acc + loss,
+                jax.tree.map(lambda a, b: a + b, met_acc, met),
                 jax.tree.map(lambda a, b: a + b, g_acc, g)), None
 
     zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-    (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), micro)
+    (loss, mets, grads), _ = jax.lax.scan(
+        body, (jnp.zeros(()), met0, zeros), micro)
     inv = 1.0 / accum
-    return loss * inv, {"ce": loss * inv, "aux": jnp.zeros(())}, \
+    return loss * inv, jax.tree.map(lambda m: m * inv, mets), \
         jax.tree.map(lambda g: g * inv, grads)
 
 
 def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
-    """Returns (init_fn, train_step, train_step_hess).
+    """Returns ``(init_fn, train_step)``.
 
-    All three are pure (jit-able with shardings by the launcher).
+    ``train_step(state, batch, do_refresh)`` is the single compiled program
+    (jit-able with shardings by the launcher): the estimator sub-graph runs
+    under ``lax.cond`` on the *traced* ``do_refresh`` flag and its EMA is
+    fused into the optimizer update, so flipping the flag at the Algorithm-3
+    cadence never triggers a second compilation.
     """
     model = get_model(cfg)
     engine = make_engine(tc)
     schedule = make_schedule(tc)
     clipper = clip_by_global_norm(tc.grad_clip)
     compressor = GradCompressor() if tc.compress_grads else None
+    hess_compressor = GradCompressor() if tc.compress_hess else None
 
     def loss_fn(params, batch):
         return model.loss_fn(cfg, params, batch, remat=tc.remat,
@@ -152,7 +193,52 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
                               engine.layout(params))
                               if compressor is not None else ()))
 
-    def _apply(state: TrainState, grads, metrics):
+    def _estimate_flat(params, batch, rng, crng):
+        """(est_shards, scale): diagonal-Hessian estimate as flat fp32
+        shards in the engine layout — the engine folds ``scale`` into the
+        fused Hessian-EMA (GNB's batch factor B, Algorithm 2 line 6).
+
+        With ``compress_hess``, the int8 collective quantizes the
+        *gradient-valued* pieces — GNB/E-F's ghat BEFORE squaring (the
+        quantity a real data-parallel reduction puts on the wire; squaring
+        first would square the per-block dynamic range and zero every
+        coordinate below ~max/16 of its scale block), and Hutchinson's
+        u ⊙ Hu estimate (the HVP reduction's wire form, u replicated)."""
+        lay = engine.layout(params)
+        sub = subsample_batch(batch, tc.hess_subbatch) \
+            if tc.hess_subbatch else batch
+        compress = (hess_compressor.allreduce_shards_stateless
+                    if hess_compressor is not None else lambda s, _: s)
+        if tc.estimator == "gnb":
+            def lf(p):
+                return model.logits_fn(cfg, p, sub, remat=tc.remat,
+                                       attn_impl=tc.attn_impl)
+            g_sh, scale = gnb_ghat_flat(lf, params, rng, lay,
+                                        mask=sub.get("mask"))
+            g_sh = compress(g_sh, crng)
+            return tuple(g * g for g in g_sh), scale
+        if tc.estimator == "hutchinson":
+            def sf(p):
+                return model.loss_fn(cfg, p, sub, remat=tc.remat,
+                                     attn_impl=tc.attn_impl)[0]
+            est = hutchinson_estimator_flat(sf, params, rng, lay)
+            return compress(est, crng), 1.0
+        if tc.estimator == "empirical_fisher":
+            def sf(p):
+                return model.loss_fn(cfg, p, sub, remat=tc.remat,
+                                     attn_impl=tc.attn_impl)[0]
+            lead = jax.tree.leaves(sub)[0]
+            n = lead.shape[0] * (lead.shape[1] if lead.ndim > 1 else 1)
+            g_sh = compress(empirical_fisher_ghat_flat(sf, params, lay),
+                            crng)
+            return tuple(g * g for g in g_sh), float(n)
+        raise ValueError(tc.estimator)
+
+    def train_step(state: TrainState, batch, do_refresh=False):
+        """One unified step (Algorithm 3 lines 6-13, refresh flag-gated)."""
+        loss, metrics, grads = _accum_grads(loss_fn, state.params, batch,
+                                            tc.grad_accum)
+        metrics = {"loss": loss, **metrics}
         grads, clip_state = clipper.update(grads, state.clip_state)
         g_sh = engine.ravel_grads(state.params, grads)
         comp_state = state.comp_state
@@ -160,12 +246,35 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
             # in-collective int8 all-reduce over the flat shards: picks up
             # the fsdp axis from the launcher-installed activation mesh
             # (mesh-less runs use the identical math on the whole shard)
-            crng = jax.random.fold_in(state.rng, state.step + (1 << 20))
-            g_sh, comp_state = compressor.allreduce_shards(g_sh, comp_state,
-                                                           crng)
+            g_sh, comp_state = compressor.allreduce_shards(
+                g_sh, comp_state, _fold_rng(state, RNG_TAG_COMPRESS))
         lr = schedule(state.opt_state.count)
-        params, opt_state = engine.step_shards(state.opt_state, state.params,
-                                               g_sh, lr)
+
+        if engine.hessian_aware:
+            # the whole engine dispatch sits under the cond, not just the
+            # estimator: the hot branch runs the plain fused step (4 reads +
+            # 2 writes per element) and only the refresh branch pays for the
+            # estimate operand and the h write — inside that branch the
+            # refresh flag is constant True, so the kernel's select folds
+            # away and the fused sweep still touches h exactly once
+            def _refresh_step():
+                est_sh, scale = _estimate_flat(
+                    state.params, batch, _fold_rng(state, RNG_TAG_HESS),
+                    _fold_rng(state, RNG_TAG_HESS_COMPRESS))
+                return engine.step_with_refresh(
+                    state.opt_state, state.params, g_sh, lr, est_sh,
+                    jnp.asarray(scale, jnp.float32), True)
+
+            def _plain_step():
+                return engine.step_shards(state.opt_state, state.params,
+                                          g_sh, lr)
+
+            params, opt_state = jax.lax.cond(
+                jnp.asarray(do_refresh, bool), _refresh_step, _plain_step)
+        else:
+            params, opt_state = engine.step_shards(state.opt_state,
+                                                   state.params, g_sh, lr)
+
         metrics = dict(metrics,
                        grad_norm=clip_state.last_norm,
                        clip_triggers=clip_state.triggers,
@@ -176,50 +285,7 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
                           opt_state=opt_state, clip_state=clip_state,
                           rng=state.rng, comp_state=comp_state), metrics
 
-    def train_step(state: TrainState, batch):
-        loss, metrics, grads = _accum_grads(loss_fn, state.params, batch,
-                                            tc.grad_accum)
-        metrics = {"loss": loss, **metrics}
-        return _apply(state, grads, metrics)
-
-    def _estimate_hessian(params, batch, rng):
-        """Returns (estimate_tree, scale) — the engine folds ``scale`` into
-        the Hessian-EMA kernel (GNB's batch factor B, Algorithm 2 line 6)."""
-        sub = subsample_batch(batch, tc.hess_subbatch) \
-            if tc.hess_subbatch else batch
-        if tc.estimator == "gnb":
-            def lf(p):
-                return model.logits_fn(cfg, p, sub, remat=tc.remat,
-                                       attn_impl=tc.attn_impl)
-            mask = sub.get("mask")
-            return gnb_estimator_sq(lf, params, rng, mask=mask)
-        if tc.estimator == "hutchinson":
-            def sf(p):
-                return model.loss_fn(cfg, p, sub, remat=tc.remat,
-                                     attn_impl=tc.attn_impl)[0]
-            return hutchinson_estimator(sf, params, rng), 1.0
-        if tc.estimator == "empirical_fisher":
-            def sf(p):
-                return model.loss_fn(cfg, p, sub, remat=tc.remat,
-                                     attn_impl=tc.attn_impl)[0]
-            n = jax.tree.leaves(sub)[0].shape[0] * \
-                (jax.tree.leaves(sub)[0].shape[1]
-                 if jax.tree.leaves(sub)[0].ndim > 1 else 1)
-            return empirical_fisher_estimator(sf, params, n), 1.0
-        raise ValueError(tc.estimator)
-
-    def train_step_hess(state: TrainState, batch):
-        """Gradient step + Hessian-EMA refresh (Algorithm 3 lines 7-9)."""
-        rng = jax.random.fold_in(state.rng, state.step)
-        if engine.hessian_aware:
-            est, scale = _estimate_hessian(state.params, batch, rng)
-            opt_state = engine.update_hessian(state.opt_state, est,
-                                              scale=scale,
-                                              params=state.params)
-            state = state._replace(opt_state=opt_state)
-        return train_step(state, batch)
-
-    return init_fn, train_step, train_step_hess
+    return init_fn, train_step
 
 
 def train_loop(cfg: ModelConfig, tc: TrainerConfig, source, *,
@@ -234,22 +300,22 @@ def train_loop(cfg: ModelConfig, tc: TrainerConfig, source, *,
     params/m/h buffers update in place, halving optimizer-state peak
     memory.  Opt-in here because it consumes the caller's ``state``
     argument; the production driver always donates."""
-    init_fn, train_step, hess_step = make_train_fns(cfg, tc)
+    init_fn, train_step = make_train_fns(cfg, tc)
     if jit:
         dn = (0,) if donate and jax.default_backend() != "cpu" else ()
         train_step = jax.jit(train_step, donate_argnums=dn)
-        hess_step = jax.jit(hess_step, donate_argnums=dn)
     if state is None:
         state = init_fn(jax.random.PRNGKey(tc.seed))
-    needs_hess = tc.optimizer in ("sophia_g", "sophia_h", "adahessian")
+    # the engine registry knows which families refresh curvature
+    # out-of-band — a hardcoded optimizer-name tuple here silently skipped
+    # refresh for any newly registered curvature family
+    needs_hess = hessian_aware_optimizer(tc.optimizer)
     k = tc.hess_interval
     history = []
     for t in range(start_step, start_step + num_steps):
         batch = {k2: jnp.asarray(v) for k2, v in source.batch_at(t).items()}
-        if needs_hess and t % k == 0:
-            state, metrics = hess_step(state, batch)
-        else:
-            state, metrics = train_step(state, batch)
+        flag = jnp.asarray(needs_hess and t % k == 0)
+        state, metrics = train_step(state, batch, flag)
         history.append({k2: float(v) for k2, v in metrics.items()})
         if callback is not None:
             callback(t, state, metrics)

@@ -8,14 +8,20 @@ real (simulated) devices.  Prints one JSON object on the last line.
 Modes:
     parity   — identical seed, 1-device vs 8-device mesh: step-for-step
                losses for a given optimizer, with/without int8 compression,
-               plus the compressed wire-bytes accounting per flat shard.
+               plus the compressed wire-bytes accounting per flat shard and
+               the jit-cache size (the unified stepper must compile exactly
+               one program per mesh even as the refresh flag flips).
     elastic  — train 6 steps on an 8-device mesh, checkpoint, restore onto
                a 4-device mesh, report bit-identity of params/m/h and the
                continued loss trajectory through the next Hessian refresh.
 """
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# append (not overwrite): inherited XLA flags — determinism/debug knobs set
+# by CI or the developer — must keep applying inside the subprocess
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8"
+                           ).strip()
 
 import argparse
 import dataclasses
@@ -29,10 +35,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.gpt2 import GPT2_TINY
+from repro.core import hessian_aware_optimizer
 from repro.data import DataConfig, make_source
 from repro.distributed.compression import GradCompressor, compressed_bytes
 from repro.launch.mesh import make_mesh
-from repro.launch.train import compile_steps  # the production SPMD wiring
+from repro.launch.train import compile_train_step  # the production wiring
 from repro.train import TrainerConfig, checkpoint as ckpt, make_engine
 
 # fp32 compute: parity across meshes is then limited only by collective
@@ -42,10 +49,11 @@ STEPS = 8
 HESS_INTERVAL = 3  # refreshes at t = 0, 3, 6  ->  >= 2 full intervals
 
 
-def _tc(opt, compress):
+def _tc(opt, compress, compress_hess=False):
     return TrainerConfig(optimizer=opt, peak_lr=1e-3, total_steps=100,
                          warmup_steps=2, hess_interval=HESS_INTERVAL,
-                         hess_subbatch=4, compress_grads=compress, seed=0)
+                         hess_subbatch=4, compress_grads=compress,
+                         compress_hess=compress_hess, seed=0)
 
 
 def _mesh(n_dev):
@@ -64,36 +72,39 @@ def _setup(tc, mesh):
     """The production driver's jit/sharding wiring (launch.train), so the
     parity tier validates what actually runs, not a test-local copy."""
     sample = {k: jnp.asarray(v) for k, v in _source().batch_at(0).items()}
-    train_step, hess_step, init_fn, ssh, bsh = compile_steps(CFG, tc, mesh,
-                                                             sample)
+    train_step, init_fn, ssh, bsh = compile_train_step(CFG, tc, mesh, sample)
     state = init_fn(jax.random.PRNGKey(0))
     if ssh is not None:
         state = jax.device_put(state, ssh)
-    return train_step, hess_step, init_fn, state, ssh, bsh
+    return train_step, init_fn, state, ssh, bsh
 
 
-def _trajectory(n_dev, opt, compress, steps=STEPS):
-    tc = _tc(opt, compress)
+def _trajectory(n_dev, opt, compress, compress_hess=False, steps=STEPS):
+    tc = _tc(opt, compress, compress_hess)
     mesh = _mesh(n_dev)
-    train_step, hess_step, _, state, _, bsh = _setup(tc, mesh)
+    train_step, _, state, _, bsh = _setup(tc, mesh)
     src = _source()
-    needs_hess = opt in ("sophia_g", "sophia_h", "adahessian")
+    needs_hess = hessian_aware_optimizer(opt)
     losses = []
     for t in range(steps):
         batch = {k: jnp.asarray(v) for k, v in src.batch_at(t).items()}
         if bsh is not None:
             batch = jax.device_put(batch, bsh)
-        fn = hess_step if (needs_hess and t % HESS_INTERVAL == 0) \
-            else train_step
-        state, metrics = fn(state, batch)
+        flag = jnp.asarray(needs_hess and t % HESS_INTERVAL == 0)
+        state, metrics = train_step(state, batch, flag)
         losses.append(float(metrics["loss"]))
-    return losses, state
+    # the unified-stepper contract: flipping the refresh flag across a full
+    # run must never grow the jit cache — exactly ONE program per mesh
+    return losses, state, train_step._cache_size()
 
 
 def parity(args):
-    l1, _ = _trajectory(1, args.opt, args.compress)
-    l8, s8 = _trajectory(8, args.opt, args.compress)
-    out = {"losses_1": l1, "losses_8": l8}
+    l1, _, progs1 = _trajectory(1, args.opt, args.compress,
+                                bool(args.compress_hess))
+    l8, s8, progs8 = _trajectory(8, args.opt, args.compress,
+                                 bool(args.compress_hess))
+    out = {"losses_1": l1, "losses_8": l8,
+           "programs_1": progs1, "programs_8": progs8}
     if args.compress:
         lay = make_engine(_tc(args.opt, True)).layout(
             jax.device_get(s8.params))
@@ -107,14 +118,14 @@ def parity(args):
 
 def elastic(args):
     tc = _tc("sophia_g", False)
-    train_step, hess_step, _, state, _, bsh = _setup(tc, _mesh(8))
+    train_step, _, state, _, bsh = _setup(tc, _mesh(8))
     src = _source()
     losses_before = []
     for t in range(6):
         batch = jax.device_put(
             {k: jnp.asarray(v) for k, v in src.batch_at(t).items()}, bsh)
-        fn = hess_step if t % HESS_INTERVAL == 0 else train_step
-        state, metrics = fn(state, batch)
+        state, metrics = train_step(state, batch,
+                                    jnp.asarray(t % HESS_INTERVAL == 0))
         losses_before.append(float(metrics["loss"]))
 
     layout_meta = make_engine(tc).describe(jax.device_get(state.params))
@@ -123,7 +134,7 @@ def elastic(args):
 
     # "lose" half the machine: rebuild the production wiring on a 4-device
     # mesh and re-shard the checkpoint onto it
-    train_step, hess_step, init_fn, _, ssh, bsh4 = _setup(tc, _mesh(4))
+    train_step, init_fn, _, ssh, bsh4 = _setup(tc, _mesh(4))
     like = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
     state4, start = ckpt.restore_resharded(args.ckpt_dir, like, shardings=ssh,
                                            expect_layout=layout_meta)
@@ -144,11 +155,12 @@ def elastic(args):
     for t in range(start, start + 5):  # through the refreshes at t=6 and 9
         batch = jax.device_put(
             {k: jnp.asarray(v) for k, v in src.batch_at(t).items()}, bsh4)
-        fn = hess_step if t % HESS_INTERVAL == 0 else train_step
-        state4, metrics = fn(state4, batch)
+        state4, metrics = train_step(state4, batch,
+                                     jnp.asarray(t % HESS_INTERVAL == 0))
         losses_after.append(float(metrics["loss"]))
     return {"bit_identical": ident, "losses_before": losses_before,
-            "losses_after": losses_after}
+            "losses_after": losses_after,
+            "programs_4": train_step._cache_size()}
 
 
 def main():
@@ -156,6 +168,7 @@ def main():
     ap.add_argument("--mode", choices=["parity", "elastic"], required=True)
     ap.add_argument("--opt", default="sophia_g")
     ap.add_argument("--compress", type=int, default=0)
+    ap.add_argument("--compress-hess", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
     out = parity(args) if args.mode == "parity" else elastic(args)

@@ -69,6 +69,25 @@ def test_allreduce_shards_error_feedback():
                for a, b in zip(state2.error, state3.error))
 
 
+def test_allreduce_shards_accepts_none_rng():
+    """rng=None selects deterministic round-to-nearest all the way down
+    (regression: the per-shard seed decorrelation xor used to TypeError on
+    None instead of preserving _quantize's documented rng-less mode)."""
+    params = {"w": jnp.zeros((600,))}
+    lay = build_layout(params, block=256)
+    comp = GradCompressor(block=256)
+    g_sh = tuple(jax.random.normal(jax.random.PRNGKey(3), (s,))
+                 for s in lay.shard_sizes)
+    deq1, _ = comp.allreduce_shards(g_sh, comp.init_shards(lay), None,
+                                    mesh=None)
+    deq2 = comp.allreduce_shards_stateless(g_sh, None, mesh=None)
+    for g, a, b in zip(g_sh, deq1, deq2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # nearest rounding: |deq - g| <= scale/2 <= max|block|/254
+        assert float(jnp.max(jnp.abs(a - g))) <= \
+            float(jnp.max(jnp.abs(g))) / 254 + 1e-12
+
+
 def test_wire_bytes_formula():
     """Per-shard wire bytes = n int8 payload + 4 bytes per 256-block scale,
     and the layout-level accounting agrees with compressed_bytes."""
@@ -179,24 +198,33 @@ def _run_driver(*args, timeout=1200):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("opt,compress", [
-    ("sophia_g", False), ("sophia_g", True),
-    ("adamw", False), ("adamw", True),
+@pytest.mark.parametrize("opt,compress,compress_hess", [
+    ("sophia_g", False, False), ("sophia_g", True, False),
+    ("sophia_g", True, True),  # estimator grad rides the int8 collective
+    ("adamw", False, False), ("adamw", True, False),
 ])
-def test_one_vs_eight_device_loss_parity(opt, compress):
+def test_one_vs_eight_device_loss_parity(opt, compress, compress_hess):
     """Identical seed -> step-for-step loss parity between a 1-device and
     an 8-device mesh, across >= 2 Hessian-refresh intervals.  Compression
     must not break parity: quantization happens on the reduced shard with
     position-keyed rounding, so the compressed trajectory is the same
-    function of the data on any device count."""
+    function of the data on any device count.  The compress_hess case runs
+    the stateless int8 collective *inside* the lax.cond refresh branch —
+    the one genuinely new shard_map/cond interaction of the unified
+    stepper."""
     out = _run_driver("--mode", "parity", "--opt", opt,
-                      "--compress", str(int(compress)))
+                      "--compress", str(int(compress)),
+                      "--compress-hess", str(int(compress_hess)))
     l1, l8 = out["losses_1"], out["losses_8"]
     assert len(l1) == len(l8) >= 7
     assert all(np.isfinite(l1)) and all(np.isfinite(l8))
     # fp32-compute model: the only cross-mesh difference is collective
     # reduction order (fp32 ulps/step, mildly amplified by the trajectory)
     np.testing.assert_allclose(l8, l1, rtol=2e-4, atol=2e-4)
+    # unified stepper: the refresh flag is traced, so a full run (hot steps
+    # AND refresh steps) compiles exactly ONE program per mesh
+    assert out["programs_1"] == 1 and out["programs_8"] == 1, \
+        (out["programs_1"], out["programs_8"])
     if compress:
         for n, b in zip(out["shard_sizes"], out["wire_bytes"]):
             assert b == n + 4 * (-(-n // 256))
@@ -220,3 +248,5 @@ def test_elastic_restore_8_to_4_devices(tmp_path):
     for a, b in zip(after, after[1:]):
         assert b < a + 0.02, (a, b)
     assert after[-1] < after[0]
+    # the shrunken mesh also compiled exactly one program
+    assert out["programs_4"] == 1, out["programs_4"]

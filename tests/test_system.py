@@ -109,7 +109,7 @@ def test_sharded_train_step_with_collectives(tmp_path):
         set_activation_mesh(mesh)
         tc = TrainerConfig(optimizer="sophia_g", peak_lr=1e-3,
                            total_steps=100, warmup_steps=2, hess_subbatch=4)
-        init_fn, train_step, hess_step = make_train_fns(cfg, tc)
+        init_fn, train_step = make_train_fns(cfg, tc)
         state = init_fn(jax.random.PRNGKey(0))
         pspecs = partition_params(state.params, mesh, fsdp=True)
         sspecs = state_partition_specs(state, pspecs)
@@ -121,13 +121,15 @@ def test_sharded_train_step_with_collectives(tmp_path):
         batch = {{k: jnp.asarray(v) for k, v in src.batch_at(0).items()}}
         bspecs = batch_specs(batch, mesh)
         batch = jax.device_put(batch, ns(bspecs))
-        step = jax.jit(hess_step, in_shardings=(ns(sspecs), ns(bspecs)),
+        step = jax.jit(train_step,
+                       in_shardings=(ns(sspecs), ns(bspecs), None),
                        out_shardings=(ns(sspecs), None))
-        lowered = step.lower(state, batch)
+        flag = jnp.asarray(True)  # refresh branch exercised under sharding
+        lowered = step.lower(state, batch, flag)
         compiled = lowered.compile()
         txt = compiled.as_text()
         assert ("all-reduce" in txt or "all-gather" in txt), "no collectives!"
-        state, metrics = compiled(state, batch)
+        state, metrics = compiled(state, batch, flag)
         loss = float(metrics["loss"])
         assert np.isfinite(loss), loss
         print("SHARDED_OK", loss)
