@@ -1,4 +1,5 @@
-"""Batched serving example: prefill + KV-cache decode across families.
+"""Continuous-batching serving example: mixed-length requests stream
+through slot-based engines across three model families.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -9,18 +10,33 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import get_model
-from repro.serve import generate
+from repro.serve import Request, ServeEngine
+
+# (prompt_len, max_new): deliberately ragged — the engine admits each
+# request into a free slot, chunk-prefills it alongside in-flight decodes,
+# and retires it the moment its budget is spent.
+REQUESTS = [(5, 18), (17, 6), (9, 12), (24, 4), (3, 20), (12, 9)]
 
 for arch in ("yi-6b", "rwkv6-7b", "recurrentgemma-2b"):
     cfg = get_config(arch, smoke=True)  # reduced configs for CPU
     model = get_model(cfg)
     params = model.init_params(cfg, jax.random.PRNGKey(0))
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
-                                cfg.vocab_size)
+    eng = ServeEngine(cfg, params, n_slots=2, cache_len=48, page_len=8,
+                      steps_per_tick=4, seed=0)
+    for i, (sp, mn) in enumerate(REQUESTS):
+        toks = jax.random.randint(jax.random.PRNGKey(1 + i), (sp,), 0,
+                                  cfg.vocab_size)
+        eng.submit(Request(uid=i, tokens=np.asarray(toks), max_new=mn,
+                           temperature=0.8))
     t0 = time.time()
-    out = generate(cfg, params, prompt, max_new=24, temperature=0.8)
-    print(f"{arch:20s} ({cfg.family:8s}) 4x24 tokens in "
-          f"{time.time() - t0:5.1f}s   first row: {out[0, :8].tolist()}")
+    results = {r.uid: r for r in eng.run()}
+    stats = eng.stats()
+    total = sum(len(r.tokens) for r in results.values())
+    print(f"{arch:20s} ({cfg.family:8s}) {len(REQUESTS)} reqs / {total} "
+          f"tokens in {time.time() - t0:5.1f}s  "
+          f"util={stats['slot_utilization']:.2f}  "
+          f"first req: {results[0].tokens[:8]}")

@@ -1,8 +1,10 @@
 # TPU hot-spot kernels for the paper's contribution: the fused Sophia
 # optimizer step (pl.pallas_call + BlockSpec VMEM tiling).
-#   sophia_update.py = the kernels (flat-shard granularity, all families)
-#   ref.py           = pure-jnp oracles (the engine's reference backend)
-#   ops.py           = per-tensor wrappers for kernel unit tests
+#   sophia_update.py    = the kernels (flat-shard granularity, all families)
+#   ref.py              = pure-jnp oracles (the engine's reference backend)
+#   ops.py              = per-tensor wrappers for kernel unit tests
+#   flash_attention.py  = fused prefill attention (serve/train long-S path)
+#   decode_attention.py = fused serve decode step over the slot ring cache
 # The production entry point is core/engine.py, which drives the kernels
 # over dtype-homogeneous flat shards (one pallas_call grid sweep per shard).
-from . import ops, ref, sophia_update
+from . import decode_attention, ops, ref, sophia_update

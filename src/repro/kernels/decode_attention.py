@@ -1,0 +1,147 @@
+"""Decode-attention Pallas TPU kernel: one query token per slot against its
+ring/paged KV cache.
+
+The serve engine's hot path is token-at-a-time attention: for every slot a
+single query attends to that slot's valid cache entries.  XLA lowers the
+jnp path as score-materialize / mask / softmax / AV — each an HBM round
+trip over the (N, C) score plane.  This kernel keeps the online softmax in
+VMEM scratch and streams the cache one page at a time, so HBM traffic is
+one read of the slot's K/V pages plus one write of the output.
+
+Layout (matches ``models/transformer.init_slots``):
+    q          (N, H, hd)       one query token per slot
+    k_cache/v  (N, C, Hkv, hd)  slot-major ring cache, C = n_pages * page_len
+    positions  (N,) int32       per-slot write position (the query's position)
+
+Ring semantics: cache index ``s`` holds absolute position
+``pos - ((pos - s) mod C)``; entries are valid when that is >= 0 (and
+inside the sliding window when one is set).  When C covers the whole
+request the ring degenerates to a linear cache and the mask to the causal
+prefix — this is the layout ``ring_mask`` in models/layers.py defines, and
+the kernel reproduces it page by page.
+
+Grid: (N, H, C / page_len) with the page axis innermost ("arbitrary"),
+accumulating via the same m/l/acc VMEM scratch pattern as
+kernels/flash_attention.py.  GQA maps h -> h // G in the KV BlockSpec.
+Per-slot positions arrive through ``PrefetchScalarGridSpec`` so the mask
+offsets are known before the body runs.
+
+Validated under ``interpret=True`` against ``kernels/ref.decode_attention_ref``
+(<= 3e-6 fp32) in tests/test_decode_attention.py; on a real TPU the same
+pallas_call compiles natively.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_PAGE = 128
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref, m_scr,
+                   l_scr, acc_scr, *, scale, page_len, cache_len, n_pages,
+                   softcap):
+    n = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    pos = pos_ref[n]
+    win = win_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)                  # (hd,)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (page_len, hd)
+    s = (q[None, :] @ k.T) * scale                       # (1, page_len)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # ring validity: index s holds absolute position pos - ((pos - s) mod C)
+    idx = j * page_len + jax.lax.broadcasted_iota(jnp.int32, (1, page_len), 1)
+    abs_pos = pos - jnp.mod(pos - idx, cache_len)
+    valid = (abs_pos >= 0) & (abs_pos > pos - win)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + p @ v_ref[0, :, 0].astype(jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_scr[...][0]
+                       / jnp.maximum(l_scr[...][0], 1e-30)).astype(o_ref.dtype)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def decode_attention_pallas(q, k_cache, v_cache, positions, *, scale=None,
+                            window=None, softcap=None,
+                            page_len=DEFAULT_PAGE, interpret=None):
+    """q (N, H, hd); k/v (N, C, Hkv, hd); positions (N,) -> (N, H, hd).
+
+    One grid step per (slot, head, page); HBM traffic = K + V pages once
+    plus Q and O.  ``page_len`` must divide C.  ``window`` may be a traced
+    scalar (it rides in as a scalar-prefetch operand, so per-layer sliding
+    windows scan cleanly); None means global attention.  ``interpret``
+    defaults to interpreter mode off-TPU, native compilation on TPU.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    N, H, hd = q.shape
+    C, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    # largest page <= requested that divides C (C is engine-rounded to its
+    # own page size, which need not divide the kernel's default of 128)
+    page_len = min(page_len, C)
+    while C % page_len:
+        page_len -= 1
+    n_pages = C // page_len
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    win = jnp.reshape(jnp.asarray(
+        (1 << 30) if window is None else window, jnp.int32), (1,))
+
+    kern = functools.partial(_decode_kernel, scale=scale, page_len=page_len,
+                             cache_len=C, n_pages=n_pages, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N, H, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda n, h, j, pos, w: (n, h, 0)),
+            pl.BlockSpec((1, page_len, 1, hd),
+                         lambda n, h, j, pos, w: (n, j, h // G, 0)),
+            pl.BlockSpec((1, page_len, 1, hd),
+                         lambda n, h, j, pos, w: (n, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda n, h, j, pos, w: (n, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),    # running max
+            pltpu.VMEM((1, 1), jnp.float32),    # running sum
+            pltpu.VMEM((1, hd), jnp.float32),   # accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(positions.astype(jnp.int32), win, q, k_cache, v_cache)
+
+
+def decode_attention_hbm_bytes(N, H, Hkv, C, hd, bytes_per_el=2) -> int:
+    """Analytic HBM floor of the fused decode step (roofline overlay)."""
+    q_o = 2 * N * H * hd
+    kv = 2 * N * C * Hkv * hd
+    return (q_o + kv) * bytes_per_el

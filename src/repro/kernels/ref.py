@@ -101,6 +101,38 @@ def flash_attention_ref(q, k, v, *, causal=True, scale=None):
                       vx.astype(jnp.float32)).astype(q.dtype)
 
 
+def decode_attention_ref(q, k_cache, v_cache, positions, *, scale=None,
+                         window=None, softcap=None):
+    """Plain masked-softmax oracle for the decode-attention kernel.
+
+    q: (N, H, hd) one query token per slot; k/v: (N, C, Hkv, hd) slot-major
+    ring cache; positions: (N,) per-slot query position.  Ring index ``s``
+    holds absolute position ``pos - ((pos - s) mod C)``; keys are valid when
+    that is >= 0 (and within ``window`` of the query when set)."""
+    import math
+
+    N, H, hd = q.shape
+    C, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kx = jnp.repeat(k_cache, G, axis=2)                 # (N, C, H, hd)
+    vx = jnp.repeat(v_cache, G, axis=2)
+    s = jnp.einsum("nhd,nchd->nhc", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = positions.astype(jnp.int32)[:, None]          # (N, 1)
+    idx = jnp.arange(C, dtype=jnp.int32)[None, :]       # (1, C)
+    abs_pos = pos - jnp.mod(pos - idx, C)
+    valid = abs_pos >= 0
+    if window is not None:
+        valid = valid & (abs_pos > pos - window)
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("nhc,nchd->nhd", w,
+                      vx.astype(jnp.float32)).astype(q.dtype)
+
+
 def adamw_fused_ref(p, m, v, g, *, lr, beta1, beta2, eps, weight_decay,
                     step):
     """Fused AdamW step (baseline gets the same kernel treatment so the

@@ -144,11 +144,9 @@ def lower_cell(arch: str, shape_name: str, mesh, *, opt: str = "sophia_g",
     position = jnp.int32(cell.specs["position"])
 
     def step(params, cache, tokens):
-        if cfg.family == "rwkv":
-            logits, new_cache = model.decode_step(cfg, params, cache, tokens)
-        else:
-            logits, new_cache = model.decode_step(cfg, params, cache, tokens,
-                                                  position)
+        # position is uniformly accepted (ignored by stateless families)
+        logits, new_cache = model.decode_step(cfg, params, cache, tokens,
+                                              position)
         return jnp.argmax(logits[:, -1], -1), new_cache
 
     jf = jax.jit(step,

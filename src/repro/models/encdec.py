@@ -16,9 +16,11 @@ import jax.numpy as jnp
 
 from ..distributed.sharding import constrain
 from .common import ModelConfig
-from .layers import (cross_entropy, decode_attention, dense_init, embed,
+from .layers import (cross_entropy, decode_attention,
+                     decode_attention_slots, dense_init, embed,
                      full_attention, init_attention, init_embedding,
-                     init_mlp, mlp, rms_norm, unembed)
+                     init_mlp, mlp, prefill_chunk_attention, rms_norm,
+                     unembed)
 
 
 def _init_norm(cfg):
@@ -177,3 +179,108 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, position):
                                          cache["xv"]))
     x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
     return unembed(params["embed"], x, cfg), dict(cache, k=nk, v=nv)
+
+
+# ---------------------------------------------------------------------------
+# slot protocol (continuous-batching serve engine; see serve/engine.py)
+#
+# Self-attention uses the same slot-major ring cache as the transformer
+# family; cross-attention K/V are per-slot rows written once at admission
+# by prefill_encoder_slot (the "prompt" of an encdec request is its frame
+# stream plus a decoder prefix, usually just BOS).
+
+
+def init_slots(cfg: ModelConfig, n_slots: int, cache_len: int,
+               src_len: int = 0) -> dict:
+    L = cfg.n_layers
+    dt = cfg.compute_dtype
+    kv = (L, n_slots, cache_len, cfg.n_kv_heads, cfg.hd)
+    xkv = (L, n_slots, src_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
+            "xk": jnp.zeros(xkv, dt), "xv": jnp.zeros(xkv, dt)}
+
+
+def reset_slot(cfg: ModelConfig, cache, slot):
+    """Ring masking hides stale self-attn entries; xk/xv are overwritten by
+    prefill_encoder_slot before the slot decodes."""
+    return cache
+
+
+def prefill_encoder_slot(cfg: ModelConfig, params, cache, slot, frames):
+    """Run the encoder for one request and write its per-layer cross K/V
+    into slot ``slot``.  frames (1, S_src, d_model)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    enc_out = encode(cfg, params, frames)
+
+    def body(_, p):
+        return None, _cross_kv(p["cross_attn"], enc_out, cfg)
+
+    _, (xk, xv) = jax.lax.scan(body, None, params["decoder"])  # (L,1,S,.. )
+    xk_new = jax.lax.dynamic_update_slice(
+        cache["xk"], xk.astype(cache["xk"].dtype), (0, slot, 0, 0, 0))
+    xv_new = jax.lax.dynamic_update_slice(
+        cache["xv"], xv.astype(cache["xv"].dtype), (0, slot, 0, 0, 0))
+    return dict(cache, xk=xk_new, xv=xv_new)
+
+
+def decode_slots(cfg: ModelConfig, params, cache, tokens, positions):
+    """One decode step across all slots.  tokens (N, 1); positions (N,)."""
+    N = tokens.shape[0]
+    positions = positions.astype(jnp.int32)
+    x = embed(params["embed"], tokens, cfg, positions[:, None])
+
+    def body(x, layer):
+        p, k_l, v_l, xk_l, xv_l = layer
+        h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+        a, k_l, v_l = decode_attention_slots(p["self_attn"], h, cfg, k_l,
+                                             v_l, positions)
+        x = x + a
+        h = rms_norm(x, p["ln_x"]["scale"], cfg.norm_eps)
+        a = full_attention(p["cross_attn"], h, cfg, None, causal=False,
+                           kv_override=(xk_l, xv_l))
+        x = x + a
+        h = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+        x = x + mlp(p["mlp"], h, cfg)
+        return x, (k_l, v_l)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["decoder"], cache["k"],
+                                         cache["v"], cache["xk"],
+                                         cache["xv"]))
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return unembed(params["embed"], x, cfg), dict(cache, k=nk, v=nv)
+
+
+def prefill_into_slot(cfg: ModelConfig, params, cache, slot, tokens, start,
+                      n_valid):
+    """Chunk-prefill one slot's decoder prefix (teacher-forced).  tokens
+    (1, P); returns (new_cache, logits (V,) fp32 of the last valid token).
+    The encoder must already have been prefilled via prefill_encoder_slot.
+    """
+    P = tokens.shape[1]
+    slot = jnp.asarray(slot, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    qpos = start + jnp.arange(P, dtype=jnp.int32)
+    x = embed(params["embed"], tokens, cfg, qpos[None])
+
+    def body(x, layer):
+        p, k_l, v_l, xk_l, xv_l = layer
+        h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+        a, k_l, v_l = prefill_chunk_attention(p["self_attn"], h, cfg, k_l,
+                                              v_l, slot, start, qpos)
+        x = x + a
+        h = rms_norm(x, p["ln_x"]["scale"], cfg.norm_eps)
+        row_xk = jax.lax.dynamic_slice_in_dim(xk_l, slot, 1, axis=0)
+        row_xv = jax.lax.dynamic_slice_in_dim(xv_l, slot, 1, axis=0)
+        x = x + full_attention(p["cross_attn"], h, cfg, None, causal=False,
+                               kv_override=(row_xk, row_xv))
+        h = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+        x = x + mlp(p["mlp"], h, cfg)
+        return x, (k_l, v_l)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["decoder"], cache["k"],
+                                         cache["v"], cache["xk"],
+                                         cache["xv"]))
+    last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    last = rms_norm(last, params["final_norm"]["scale"], cfg.norm_eps)
+    return (dict(cache, k=nk, v=nv),
+            unembed(params["embed"], last, cfg)[0, 0])

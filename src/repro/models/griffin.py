@@ -22,8 +22,10 @@ import jax.numpy as jnp
 from ..distributed.sharding import constrain
 from .common import ModelConfig
 from .layers import (chunked_attention, cross_entropy, decode_attention,
-                     dense_init, embed, full_attention, init_attention,
-                     init_embedding, init_mlp, mlp, rms_norm, unembed)
+                     decode_attention_slots, dense_init, embed,
+                     full_attention, init_attention, init_embedding,
+                     init_mlp, mlp, rms_norm, slot_slice, slot_update,
+                     unembed)
 
 RG_LRU_C = 8.0
 
@@ -269,6 +271,85 @@ def decode_step(cfg: ModelConfig, params, state, tokens, position):
         new_state["tail"] = nt
     x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
     return unembed(params["embed"], x, cfg), new_state
+
+
+# ---------------------------------------------------------------------------
+# slot protocol (continuous-batching serve engine; see serve/engine.py)
+#
+# The rolling-window KV cache IS a ring cache of size local_window, so the
+# attention tail reuses layers.decode_attention_slots unchanged (and with
+# it the Pallas decode kernel).  The recurrent state (h, conv) must be
+# zeroed on slot reuse; the window KV is ring-masked and needs no reset.
+
+
+def init_slots(cfg: ModelConfig, n_slots: int, cache_len: int = 0) -> dict:
+    """``cache_len`` ignored — state is bounded by ``local_window``."""
+    return init_state(cfg, n_slots)
+
+
+def reset_slot(cfg: ModelConfig, state, slot):
+    rec = {k: state[k] for k in state if k != "kv"}
+    zeros = jax.tree.map(
+        lambda leaf: jnp.zeros((leaf.shape[0], 1) + leaf.shape[2:],
+                               leaf.dtype), rec)
+    return dict(slot_update(rec, zeros, slot), kv=state["kv"])
+
+
+def decode_slots(cfg: ModelConfig, params, state, tokens, positions):
+    """One decode step across all slots.  tokens (N, 1); positions (N,)."""
+    positions = positions.astype(jnp.int32)
+    x = embed(params["embed"], tokens, cfg)
+
+    def body(x, layer):
+        p, st_r1, st_r2, k_c, v_c = layer
+        x, n1 = rec_block_apply(p["rec1"], x, cfg, state=st_r1)
+        x, n2 = rec_block_apply(p["rec2"], x, cfg, state=st_r2)
+        h = rms_norm(x, p["attn"]["ln"]["scale"], cfg.norm_eps)
+        a, k_c, v_c = decode_attention_slots(p["attn"]["attn"], h, cfg, k_c,
+                                             v_c, positions)
+        x = x + a
+        hm = rms_norm(x, p["attn"]["ln_mlp"]["scale"], cfg.norm_eps)
+        x = x + mlp(p["attn"]["mlp"], hm, cfg)
+        return x, (n1, n2, k_c, v_c)
+
+    x, (n1, n2, nk, nv) = jax.lax.scan(
+        body, x, (params["groups"], state["rec1"], state["rec2"],
+                  state["kv"]["k"], state["kv"]["v"]))
+    new_state = {"rec1": n1, "rec2": n2, "kv": {"k": nk, "v": nv}}
+    if n_tail(cfg):
+        def tail_body(x, layer):
+            p, st = layer
+            x, ns = rec_block_apply(p, x, cfg, state=st)
+            return x, ns
+        x, nt = jax.lax.scan(tail_body, x, (params["tail"], state["tail"]))
+        new_state["tail"] = nt
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return unembed(params["embed"], x, cfg), new_state
+
+
+def prefill_into_slot(cfg: ModelConfig, params, state, slot, tokens, start,
+                      n_valid):
+    """Chunk-prefill one slot token-by-token through the O(1) recurrence
+    (masked past ``n_valid``).  tokens (1, P); returns (new_state,
+    logits (V,) fp32 of the last valid token)."""
+    P = tokens.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    row = slot_slice(state, slot)
+
+    def step(carry, t):
+        st, logits = carry
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+        lg, st_new = decode_slots(cfg, params, st, tok,
+                                  (start + t)[None])
+        ok = t < n_valid
+        st = jax.tree.map(lambda a, b: jnp.where(ok, b, a), st, st_new)
+        logits = jnp.where(ok, lg[0, -1], logits)
+        return (st, logits), None
+
+    init_logits = jnp.zeros((cfg.padded_vocab,), jnp.float32)
+    (row, logits), _ = jax.lax.scan(step, (row, init_logits),
+                                    jnp.arange(P, dtype=jnp.int32))
+    return slot_update(state, row, slot), logits
 
 
 def _rolling_attention(p, x, cfg: ModelConfig, k_cache, v_cache, position,

@@ -267,6 +267,143 @@ def decode_attention(p, x, cfg: ModelConfig, k_cache, v_cache, position, *,
 
 
 # ---------------------------------------------------------------------------
+# slot-major ring-cache decode (the serve engine's per-slot decode path)
+#
+# Cache layout per layer: (N, C, Hkv, hd) with N = slots, C = n_pages *
+# page_len ring entries.  A token at per-slot position p is written at ring
+# index p % C; ring index s therefore holds absolute position
+# p - ((p - s) mod C), which the mask uses to hide unwritten / overwritten /
+# out-of-window entries.  When C covers the whole request the ring
+# degenerates to a linear cache and the mask to the causal prefix, and a
+# freshly reused slot needs no cache reset: every stale index solves to a
+# negative absolute position.
+
+_DECODE_ATTN_IMPL = {"impl": "xla"}
+
+
+def set_decode_attn_impl(impl: str) -> None:
+    """"xla" (jnp masked softmax) or "pallas" (fused page-streaming kernel,
+    kernels/decode_attention.py — interpret-mode on CPU)."""
+    assert impl in ("xla", "pallas"), impl
+    _DECODE_ATTN_IMPL["impl"] = impl
+
+
+def get_decode_attn_impl() -> str:
+    return _DECODE_ATTN_IMPL["impl"]
+
+
+def slot_slice(tree_, slot):
+    """Slice one slot's row from a slot-major state pytree (batch axis 1,
+    under the stacked-layer axis); ``slot`` may be traced."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return jax.tree.map(
+        lambda l: jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=1), tree_)
+
+
+def slot_update(tree_, row, slot):
+    """Write a single-slot row pytree back at ``slot`` (inverse of
+    :func:`slot_slice`)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return jax.tree.map(
+        lambda l, r: jax.lax.dynamic_update_slice_in_dim(
+            l, r.astype(l.dtype), slot, axis=1), tree_, row)
+
+
+def ring_write(cache, val, positions):
+    """cache (N, C, Hkv, hd) <- val (N, 1, Hkv, hd) at positions % C."""
+    N, C = cache.shape[0], cache.shape[1]
+    idx = jnp.mod(positions.astype(jnp.int32), C)
+    return cache.at[jnp.arange(N), idx].set(val[:, 0].astype(cache.dtype))
+
+
+def ring_mask(positions, C, window=None):
+    """(N, C) bool validity of each slot's ring entries at ``positions``."""
+    pos = positions.astype(jnp.int32)[:, None]          # (N, 1)
+    idx = jnp.arange(C, dtype=jnp.int32)[None, :]       # (1, C)
+    abs_pos = pos - jnp.mod(pos - idx, C)
+    valid = abs_pos >= 0
+    if window is not None:
+        valid = valid & (abs_pos > pos - window)
+    return valid
+
+
+def decode_attention_slots(p, x, cfg: ModelConfig, k_cache, v_cache,
+                           positions, *, window=None, layer_scale=1.0):
+    """Per-slot decode: x (N, 1, D); caches (N, C, Hkv, hd); positions (N,).
+
+    Returns (out (N, 1, D), new_k_cache, new_v_cache).  Unlike
+    :func:`decode_attention` every slot carries its own position, so a
+    continuous batch mixes requests at arbitrary depths in one program.
+    ``window`` and ``layer_scale`` may be traced (per-layer scan values).
+    """
+    dt = x.dtype
+    N = x.shape[0]
+    C = k_cache.shape[1]
+    q, k, v = _qkv(p, x, cfg)
+    pos2 = positions.astype(jnp.int32)[:, None]          # (N, 1)
+    if cfg.rope:
+        rp = (jnp.broadcast_to(pos2[:, None], (N, 3, 1))
+              if cfg.mrope_sections else pos2)
+        q = apply_rope(q, rp, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, rp, cfg.rope_theta, cfg.mrope_sections)
+    k_cache = ring_write(k_cache, k, positions)
+    v_cache = ring_write(v_cache, v, positions)
+    scale = layer_scale / math.sqrt(cfg.hd)
+    if _DECODE_ATTN_IMPL["impl"] == "pallas":
+        from ..kernels.decode_attention import decode_attention_pallas
+        qs = (q[:, 0].astype(jnp.float32) * scale).astype(q.dtype)
+        out = decode_attention_pallas(
+            qs, k_cache, v_cache, positions, scale=1.0, window=window,
+            softcap=cfg.attn_logit_softcap)
+        out = out.reshape(N, 1, cfg.n_heads * cfg.hd).astype(dt)
+    else:
+        scores = attention_scores_block(q, k_cache, cfg, scale)  # (N,Hkv,G,1,C)
+        valid = ring_mask(positions, C, window)
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(dt)
+        out = jnp.einsum("bkgst,btkh->bskgh", w, v_cache)
+        out = out.reshape(N, 1, cfg.n_heads * cfg.hd)
+    return out @ p["wo"].astype(dt), k_cache, v_cache
+
+
+def prefill_chunk_attention(p, h, cfg: ModelConfig, k_l, v_l, slot, start,
+                            qpos, *, window=None, layer_scale=1.0):
+    """Chunk-prefill attention for one slot (shared by the transformer and
+    encdec ``prefill_into_slot``): h (1, P, D) normed chunk; k_l/v_l
+    (N, C, Hkv, hd); ``slot``/``start`` traced scalars; qpos (P,) the
+    chunk's absolute positions.
+
+    Writes the chunk's K/V at [slot, start:start+P] and attends the chunk
+    queries against the slot's full ring row under :func:`ring_mask` —
+    entries past the chunk's valid tokens may be written freely, they stay
+    masked until decode overwrites them.  Returns (out (1, P, D), k_l, v_l).
+    """
+    dt = h.dtype
+    P = h.shape[1]
+    C = k_l.shape[1]
+    q, k, v = _qkv(p, h, cfg)
+    if cfg.rope:
+        rp = (jnp.broadcast_to(qpos[None, None], (1, 3, P))
+              if cfg.mrope_sections else qpos[None])
+        q = apply_rope(q, rp, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, rp, cfg.rope_theta, cfg.mrope_sections)
+    k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype),
+                                       (slot, start, 0, 0))
+    v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype),
+                                       (slot, start, 0, 0))
+    row_k = jax.lax.dynamic_slice_in_dim(k_l, slot, 1, axis=0)
+    row_v = jax.lax.dynamic_slice_in_dim(v_l, slot, 1, axis=0)
+    scale = layer_scale / math.sqrt(cfg.hd)
+    scores = attention_scores_block(q, row_k, cfg, scale)   # (1,Hkv,G,P,C)
+    mask = ring_mask(qpos, C, window)                       # (P, C)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(dt)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, row_v)
+    out = out.reshape(1, P, cfg.n_heads * cfg.hd)
+    return out @ p["wo"].astype(dt), k_l, v_l
+
+
+# ---------------------------------------------------------------------------
 # MLP
 
 

@@ -9,8 +9,19 @@ from .common import ModelConfig
 
 def get_model(cfg: ModelConfig) -> SimpleNamespace:
     """Returns a namespace of the family's functions:
-    init_params, forward, loss_fn, logits_fn, decode_step, and the
-    family-appropriate cache/state constructor.
+    init_params, forward, loss_fn, logits_fn, decode_step, the
+    family-appropriate cache/state constructor, and the serve-engine slot
+    protocol (uniform across families — callers never branch on family):
+
+        init_slots(cfg, n_slots, cache_len)            -> slot state pytree
+        prefill_into_slot(cfg, params, state, slot,
+                          tokens, start, n_valid)      -> (state, logits (V,))
+        decode_slots(cfg, params, state, tok, pos)     -> (logits, state)
+        reset_slot(cfg, state, slot)                   -> state
+
+    ``slot``/``start``/``n_valid`` and the per-slot ``pos`` vector are
+    traced, so each arch compiles exactly one prefill and one decode
+    program regardless of batch composition or request lengths.
     """
     if cfg.family in ("dense", "moe"):
         return SimpleNamespace(
@@ -21,6 +32,10 @@ def get_model(cfg: ModelConfig) -> SimpleNamespace:
             decode_step=transformer.decode_step,
             prefill=transformer.prefill,
             init_cache=transformer.init_cache,
+            init_slots=transformer.init_slots,
+            prefill_into_slot=transformer.prefill_into_slot,
+            decode_slots=transformer.decode_slots,
+            reset_slot=transformer.reset_slot,
         )
     if cfg.family == "rwkv":
         return SimpleNamespace(
@@ -30,6 +45,10 @@ def get_model(cfg: ModelConfig) -> SimpleNamespace:
             logits_fn=rwkv.logits_fn,
             decode_step=rwkv.decode_step,
             init_cache=lambda c, b, _len=None: rwkv.init_state(c, b),
+            init_slots=rwkv.init_slots,
+            prefill_into_slot=rwkv.prefill_into_slot,
+            decode_slots=rwkv.decode_slots,
+            reset_slot=rwkv.reset_slot,
         )
     if cfg.family == "griffin":
         return SimpleNamespace(
@@ -39,6 +58,10 @@ def get_model(cfg: ModelConfig) -> SimpleNamespace:
             logits_fn=griffin.logits_fn,
             decode_step=griffin.decode_step,
             init_cache=lambda c, b, _len=None: griffin.init_state(c, b),
+            init_slots=griffin.init_slots,
+            prefill_into_slot=griffin.prefill_into_slot,
+            decode_slots=griffin.decode_slots,
+            reset_slot=griffin.reset_slot,
         )
     if cfg.family == "encdec":
         return SimpleNamespace(
@@ -49,5 +72,10 @@ def get_model(cfg: ModelConfig) -> SimpleNamespace:
             decode_step=encdec.decode_step,
             init_cache=encdec.init_cache,
             prefill_encoder=encdec.prefill_encoder,
+            init_slots=encdec.init_slots,
+            prefill_into_slot=encdec.prefill_into_slot,
+            prefill_encoder_slot=encdec.prefill_encoder_slot,
+            decode_slots=encdec.decode_slots,
+            reset_slot=encdec.reset_slot,
         )
     raise ValueError(f"unknown family: {cfg.family}")

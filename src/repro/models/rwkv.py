@@ -263,7 +263,69 @@ def logits_fn(cfg: ModelConfig, params, batch, **_):
 
 
 def decode_step(cfg: ModelConfig, params, state, tokens, position=None):
-    """O(1) decode: state carries shift tokens + WKV matrices per layer."""
+    """O(1) decode: state carries shift tokens + WKV matrices per layer.
+
+    ``position`` is accepted for signature uniformity with the attention
+    families and ignored — the recurrence is position-free.
+    """
     logits, _, state = forward(cfg, params, tokens, state=state,
                                chunked=False)
     return logits, state
+
+
+# ---------------------------------------------------------------------------
+# slot protocol (continuous-batching serve engine; see serve/engine.py)
+#
+# The recurrent state is already slot-major: every leaf carries the batch
+# axis at position 1 under the layer axis, so slots are independent rows.
+# Unlike the ring KV cache, recurrent state MUST be zeroed on slot reuse —
+# there is no mask to hide a previous request's recurrence.
+
+
+def init_slots(cfg: ModelConfig, n_slots: int, cache_len: int = 0) -> dict:
+    """``cache_len`` ignored — O(1) state regardless of request length."""
+    return init_state(cfg, n_slots)
+
+
+def reset_slot(cfg: ModelConfig, state, slot):
+    """Zero slot ``slot``'s recurrent state (traced slot index)."""
+    from .layers import slot_update
+    row = jax.tree.map(
+        lambda leaf: jnp.zeros((leaf.shape[0], 1) + leaf.shape[2:],
+                               leaf.dtype), state)
+    return slot_update(state, row, slot)
+
+
+def decode_slots(cfg: ModelConfig, params, state, tokens, positions):
+    """One decode step across all slots.  positions accepted and ignored."""
+    logits, _, state = forward(cfg, params, tokens, state=state,
+                               chunked=False)
+    return logits, state
+
+
+def prefill_into_slot(cfg: ModelConfig, params, state, slot, tokens, start,
+                      n_valid):
+    """Chunk-prefill one slot: scan the chunk token-by-token through the
+    O(1) recurrence, freezing the state once ``n_valid`` tokens have been
+    absorbed (the padded tail must not touch the recurrence).  tokens
+    (1, P); returns (new_state, logits (V,) fp32 of the last valid token).
+    """
+    from .layers import slot_slice, slot_update
+    P = tokens.shape[1]
+    row = slot_slice(state, slot)
+
+    def step(carry, t):
+        st, logits = carry
+        lg, _, st_new = forward(cfg, params,
+                                jax.lax.dynamic_slice_in_dim(tokens, t, 1,
+                                                             axis=1),
+                                state=st, chunked=False)
+        ok = t < n_valid
+        st = jax.tree.map(lambda a, b: jnp.where(ok, b, a), st, st_new)
+        logits = jnp.where(ok, lg[0, -1], logits)
+        return (st, logits), None
+
+    init_logits = jnp.zeros((cfg.padded_vocab,), jnp.float32)
+    (row, logits), _ = jax.lax.scan(step, (row, init_logits),
+                                    jnp.arange(P, dtype=jnp.int32))
+    return slot_update(state, row, slot), logits

@@ -23,11 +23,11 @@ import jax
 import jax.numpy as jnp
 
 from .common import ModelConfig
-from .layers import (apply_rope, attention_scores_block, chunked_attention,
-                     cross_entropy, decode_attention, dense_init, embed,
-                     embed_init, full_attention, init_attention,
-                     init_embedding, init_mlp, layer_norm, mlp, rms_norm,
-                     unembed)
+from .layers import (apply_rope, chunked_attention, cross_entropy,
+                     decode_attention, decode_attention_slots, dense_init,
+                     embed, embed_init, full_attention, init_attention,
+                     init_embedding, init_mlp, layer_norm, mlp,
+                     prefill_chunk_attention, rms_norm, unembed)
 from .moe import init_moe, moe_ffn
 
 # ---------------------------------------------------------------------------
@@ -338,6 +338,137 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, position):
 
     x = _norm(params["final_norm"], x, cfg)
     return unembed(params["embed"], x, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# slot protocol (continuous-batching serve engine; see serve/engine.py)
+#
+# Slot-major ring KV cache: (L, N, C, Hkv, hd) with C = n_pages * page_len.
+# Ring index s of a slot at position p holds absolute position
+# p - ((p - s) mod C); the mask (layers.ring_mask) hides unwritten, stale
+# and out-of-window entries, so reusing a slot needs no cache reset and a
+# prefill chunk may write its padded tail unmasked — those indices stay
+# invisible until a later decode overwrites them with real tokens.
+
+
+def init_slots(cfg: ModelConfig, n_slots: int, cache_len: int) -> dict:
+    L = cfg.n_layers
+    shape = (L, n_slots, cache_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, cfg.compute_dtype),
+            "v": jnp.zeros(shape, cfg.compute_dtype)}
+
+
+def reset_slot(cfg: ModelConfig, cache, slot):
+    """Ring masking hides stale entries — nothing to clear for attention."""
+    return cache
+
+
+def _slot_layer_sweep(cfg: ModelConfig, params, cache, x, attn_fn):
+    """Layer sweep shared by :func:`decode_slots` and
+    :func:`prefill_into_slot` — the grouped-MoE reshape, attention/FFN
+    residual plumbing and both scan bodies live once, parameterized by the
+    inner attention call ``attn_fn(p_attn, h, k_l, v_l, window, scale) ->
+    (a, k_l, v_l)``.  Returns (hidden, new_cache)."""
+    windows = layer_windows(cfg, cache["k"].shape[2])
+    scales = layer_scales(cfg)
+
+    grouped = cfg.family == "moe" and cfg.moe_every > 1
+    if grouped:
+        ng = n_scan_groups(cfg)
+        kc = cache["k"].reshape((ng, cfg.moe_every) + cache["k"].shape[1:])
+        vc = cache["v"].reshape((ng, cfg.moe_every) + cache["v"].shape[1:])
+    else:
+        kc, vc = cache["k"], cache["v"]
+
+    def attn_sub(p, x, k_l, v_l, w, s):
+        h = _norm(p["ln1"], x, cfg)
+        a, k_l, v_l = attn_fn(p["attn"], h, k_l, v_l, w, s)
+        if cfg.post_norms:
+            a = _norm(p["ln1_post"], a, cfg)
+        return x + a, k_l, v_l
+
+    def ffn_sub(p, x):
+        h = _norm(p["ln2"], x, cfg)
+        if "moe" in p:
+            f, _ = moe_ffn(p["moe"], h, cfg)
+        else:
+            f = mlp(p["mlp"], h, cfg)
+        if cfg.post_norms:
+            f = _norm(p["ln2_post"], f, cfg)
+        return x + f
+
+    if grouped:
+        def body(x, layer):
+            p, k_g, v_g, w, s = layer
+            x, k0, v0 = attn_sub(p["dense"], x, k_g[0], v_g[0], w, s)
+            x = ffn_sub(p["dense"], x)
+            x, k1, v1 = attn_sub(p["moe"], x, k_g[1], v_g[1], w, s)
+            x = ffn_sub(p["moe"], x)
+            return x, (jnp.stack([k0, k1]), jnp.stack([v0, v1]))
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kc, vc,
+                                             windows, scales))
+        return x, {"k": nk.reshape(cache["k"].shape),
+                   "v": nv.reshape(cache["v"].shape)}
+
+    def body(x, layer):
+        p, k_l, v_l, w, s = layer
+        x, k_l, v_l = attn_sub(p, x, k_l, v_l, w, s)
+        x = ffn_sub(p, x)
+        return x, (k_l, v_l)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kc, vc,
+                                         windows, scales))
+    return x, {"k": nk, "v": nv}
+
+
+def decode_slots(cfg: ModelConfig, params, cache, tokens, positions):
+    """One decode step across all slots.  tokens (N, 1); positions (N,).
+
+    Returns (logits (N, 1, V), new_cache).  Identical math to
+    :func:`decode_step` when every slot sits at the same position, but each
+    slot carries its own position so a continuous batch mixes requests at
+    arbitrary depths in one compiled program.
+    """
+    positions = positions.astype(jnp.int32)
+    x = embed(params["embed"], tokens, cfg, positions[:, None])
+
+    def attn_fn(p, h, k_l, v_l, w, s):
+        return decode_attention_slots(p, h, cfg, k_l, v_l, positions,
+                                      window=w, layer_scale=s)
+
+    x, new_cache = _slot_layer_sweep(cfg, params, cache, x, attn_fn)
+    x = _norm(params["final_norm"], x, cfg)
+    return unembed(params["embed"], x, cfg), new_cache
+
+
+def prefill_into_slot(cfg: ModelConfig, params, cache, slot, tokens, start,
+                      n_valid):
+    """Chunk-prefill one slot.  tokens (1, P) int32; ``slot``, ``start``
+    and ``n_valid`` are traced scalars, so one compiled program serves every
+    chunk of every request.
+
+    Writes K/V for the chunk's positions into the slot's cache row and
+    returns (new_cache, logits (V,) fp32 of the last *valid* token — the
+    next-token distribution once the final chunk lands).  Entries past
+    ``n_valid`` are written but stay ring-masked until decode overwrites
+    them; queries past ``n_valid`` compute garbage that nothing reads.
+    """
+    P = tokens.shape[1]
+    slot = jnp.asarray(slot, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    qpos = start + jnp.arange(P, dtype=jnp.int32)       # (P,)
+    x = embed(params["embed"], tokens, cfg, qpos[None])
+
+    def attn_fn(p, h, k_l, v_l, w, s):
+        return prefill_chunk_attention(p, h, cfg, k_l, v_l, slot, start,
+                                       qpos, window=w, layer_scale=s)
+
+    x, new_cache = _slot_layer_sweep(cfg, params, cache, x, attn_fn)
+    # only the last valid token's logits matter (next-token distribution)
+    last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    last = _norm(params["final_norm"], last, cfg)
+    return new_cache, unembed(params["embed"], last, cfg)[0, 0]
 
 
 def prefill(cfg: ModelConfig, params, tokens, *, attn_impl="auto",

@@ -1,1 +1,3 @@
-from .decode import generate, make_serve_step
+from .decode import (generate, generate_lockstep, make_decode_burst,
+                     make_serve_step)
+from .engine import Request, RequestResult, ServeEngine

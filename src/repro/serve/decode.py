@@ -1,13 +1,19 @@
-"""Batched serving: prefill + token-by-token decode with KV caches.
+"""Serving decode paths: the compiled burst loop + legacy lockstep baseline.
 
-``serve_step`` is the function the decode_32k / long_500k dry-run cells
-lower: one new token for every sequence in the batch against a cache of
-``seq_len``.  ``generate`` is the end-to-end batched request loop used by
-examples/serve.py.
+``make_decode_burst`` builds the engine's hot loop: a ``lax.scan`` over
+decode steps with per-slot position, per-slot remaining-token budget,
+EOS/length masking and greedy + temperature sampling all inside the scan —
+one compiled program per arch regardless of batch composition or request
+lengths (slots ride through as traced vectors).
+
+``generate`` is the end-to-end batched API: a thin wrapper over
+``serve.engine.ServeEngine`` so every caller exercises the same slot/ring
+path the production engine runs.  ``generate_lockstep`` preserves the
+pre-engine Python token loop as the benchmark baseline
+(benchmarks/serve_throughput.py) — do not use it for new code.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -15,18 +21,18 @@ import jax.numpy as jnp
 
 from ..models import ModelConfig, get_model
 
+NO_EOS = -1  # sentinel: no EOS id for this slot
+
 
 def make_serve_step(cfg: ModelConfig, *, temperature: float = 0.0):
     """Returns serve_step(params, cache, tokens, position, rng) ->
-    (next_tokens (B,1), logits, cache)."""
+    (next_tokens (B,1), logits, cache).  ``position`` is passed to every
+    family — stateless ones ignore it (no family branching here)."""
     model = get_model(cfg)
 
     def serve_step(params, cache, tokens, position, rng):
-        if cfg.family == "rwkv":
-            logits, cache = model.decode_step(cfg, params, cache, tokens)
-        else:
-            logits, cache = model.decode_step(cfg, params, cache, tokens,
-                                              position)
+        logits, cache = model.decode_step(cfg, params, cache, tokens,
+                                          position)
         logits = logits[:, -1, :]
         if temperature > 0.0:
             nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
@@ -37,10 +43,113 @@ def make_serve_step(cfg: ModelConfig, *, temperature: float = 0.0):
     return serve_step
 
 
+# ---------------------------------------------------------------------------
+# the compiled decode loop
+
+
+def sample_tokens(rng, logits, temps):
+    """Greedy where temps <= 0, temperature sampling elsewhere.
+    logits (N, V) fp32; temps (N,) fp32 -> (N,) int32."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.random.categorical(rng, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temps > 0.0, sampled, greedy)
+
+
+def _select_slots(new, old, active):
+    """Per-slot pytree select (slot axis 1 in every leaf): freed/prefilling
+    slots must not advance during a decode burst."""
+    def sel(a, b):
+        m = active.reshape((1, active.shape[0]) + (1,) * (a.ndim - 2))
+        return jnp.where(m, a, b)
+
+    return jax.tree.map(sel, new, old)
+
+
+def make_decode_burst(cfg: ModelConfig, n_steps: int):
+    """Builds burst(params, state, tokens, positions, remaining, temps,
+    eos_ids, rng) -> (state, tokens, positions, remaining, ys, act).
+
+    One ``lax.scan`` of ``n_steps`` decode steps over all slots:
+
+      * ``remaining[i] > 0`` marks slot i active; inactive slots are frozen
+        (state unselected, position pinned, last token re-fed) so admitted-
+        but-still-prefilling slots and freed slots ride along inertly;
+      * a slot emitting its EOS id (or exhausting its budget) deactivates
+        inside the scan — no host round-trip per token;
+      * sampling is per-slot: greedy at temps[i] <= 0, temperature
+        sampling otherwise, one RNG split per step.
+
+    ``ys`` (n_steps, N) are emitted tokens, ``act`` (n_steps, N) marks
+    which entries are real.  Wrap in jax.jit — everything is traced, so
+    the jit cache stays at one program per (N, n_steps).
+    """
+    model = get_model(cfg)
+
+    def burst(params, state, tokens, positions, remaining, temps, eos_ids,
+              rng):
+        def body(carry, _):
+            state, toks, pos, rem, rng = carry
+            rng, sub = jax.random.split(rng)
+            logits, new_state = model.decode_slots(cfg, params, state, toks,
+                                                   pos)
+            active = rem > 0
+            nxt = sample_tokens(sub, logits[:, -1, :], temps)
+            nxt = jnp.where(active, nxt, toks[:, 0])
+            hit_eos = active & (nxt == eos_ids)
+            rem = jnp.where(active,
+                            jnp.where(hit_eos, jnp.zeros_like(rem), rem - 1),
+                            rem)
+            pos = jnp.where(active, pos + 1, pos)
+            state = _select_slots(new_state, state, active)
+            return (state, nxt[:, None], pos, rem, rng), (nxt, active)
+
+        (state, tokens, positions, remaining, rng), (ys, act) = jax.lax.scan(
+            body, (state, tokens, positions, remaining, rng), None,
+            length=n_steps)
+        return state, tokens, positions, remaining, ys, act
+
+    return burst
+
+
+# ---------------------------------------------------------------------------
+# public generate API (thin wrapper over the engine)
+
+
 def generate(cfg: ModelConfig, params, prompt_tokens, *, max_new: int,
              temperature: float = 0.0, seed: int = 0,
-             max_len: Optional[int] = None):
-    """Greedy/temperature batched generation.  prompt (B, S_p) int32."""
+             max_len: Optional[int] = None, eos_id: Optional[int] = None,
+             page_len: Optional[int] = None):
+    """Greedy/temperature batched generation.  prompt (B, S_p) int32 ->
+    (B, max_new) int32.  Runs through the continuous-batching engine with
+    one slot per row; greedy output is token-identical to the legacy
+    lockstep path (pinned by tests/test_serve.py)."""
+    from .engine import Request, ServeEngine
+
+    B, Sp = prompt_tokens.shape
+    cache_len = max_len or (Sp + max_new)
+    eng = ServeEngine(cfg, params, n_slots=B, cache_len=cache_len,
+                      page_len=page_len or min(Sp, 32),
+                      steps_per_tick=min(8, max(1, max_new - 1)), seed=seed)
+    for i in range(B):
+        eng.submit(Request(uid=i, tokens=prompt_tokens[i],
+                           max_new=max_new, temperature=temperature,
+                           eos_id=eos_id))
+    results = {r.uid: r for r in eng.run()}
+    pad = eos_id if eos_id is not None else 0
+    out = jnp.full((B, max_new), pad, jnp.int32)
+    for i in range(B):
+        toks = jnp.asarray(results[i].tokens, jnp.int32)
+        out = out.at[i, :toks.shape[0]].set(toks)
+    return out
+
+
+def generate_lockstep(cfg: ModelConfig, params, prompt_tokens, *,
+                      max_new: int, temperature: float = 0.0, seed: int = 0,
+                      max_len: Optional[int] = None):
+    """Legacy fixed-batch generation: Python token loop, full-``max_len``
+    padded caches, every request marches in lockstep.  Kept as the
+    benchmark baseline; superseded by :func:`generate`."""
     model = get_model(cfg)
     B, Sp = prompt_tokens.shape
     max_len = max_len or (Sp + max_new)
@@ -59,9 +168,8 @@ def generate(cfg: ModelConfig, params, prompt_tokens, *, max_new: int,
         pos = Sp
     else:
         # recurrent families: feed the prompt token-by-token
-        cache = model.init_cache(cfg, B, max_len) \
-            if cfg.family != "encdec" else None
         assert cfg.family in ("rwkv", "griffin"), cfg.family
+        cache = model.init_cache(cfg, B, max_len)
         last = None
         for t in range(Sp):
             rng, sub = jax.random.split(rng)
