@@ -1,0 +1,199 @@
+"""Loss-stage memory + step time: logits-free vs materialized logits.
+
+Measures the isolated LM-loss stage (hidden -> loss, d_hidden, d_W) for
+the three ``models.loss.lm_loss`` implementations across a vocab sweep:
+
+  * ``temp_bytes``       XLA's compiled peak temp allocation
+                         (``compiled.memory_analysis()``)
+  * ``has_btv_buffer``   whether any buffer of >= B*T*V elements appears in
+                         the optimized HLO — the [B*T, V] logits residency
+                         the fused path exists to eliminate
+  * ``ms``               wall time per loss+grad call
+  * ``model_hbm_bytes``  the analytic traffic model
+                         (kernels.fused_ce.lm_loss_hbm_bytes_*)
+
+plus an end-to-end train-step smoke comparison (chunked — the compiled
+logits-free default — vs the legacy unfused path).  Emits
+``benchmarks/BENCH_loss.json``; the nightly CI job runs ``--smoke`` and
+fails if the fused/chunked paths regress to [B*T, V] residency or the
+logits-free step time regresses past 1.25x unfused.
+
+Note: on CPU the Pallas kernel runs in interpret mode (its grid unrolled
+into the jit), so its wall time is NOT representative — the compiled
+logits-free proxy for step time is the chunked path; the fused row is
+still the one that proves V-independent residency for the kernel program.
+"""
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_ce import (lm_loss_hbm_bytes_fused,
+                                    lm_loss_hbm_bytes_unfused)
+from repro.models import lm_loss, set_lm_loss_impl
+from repro.models.common import ModelConfig
+
+_SHAPE = re.compile(r"(?:f32|f16|bf16|s32|u32|pred|s8|u8)\[([0-9,]+)\]")
+
+
+def _max_buffer_numel(hlo_text: str, exclude=()) -> int:
+    """Largest buffer (elements) in the optimized HLO; ``exclude`` drops
+    exact element counts (the V*D weight/d_W buffers, which are gradient
+    outputs and necessarily scale with V — the residency claim is about
+    activations)."""
+    best = 0
+    for dims in _SHAPE.findall(hlo_text):
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if n in exclude:
+            continue
+        best = max(best, n)
+    return best
+
+
+def _mk_cfg(D, V):
+    return ModelConfig(name=f"loss-bench-v{V}", family="dense", n_layers=1,
+                      d_model=D, n_heads=4, n_kv_heads=4, d_ff=4 * D,
+                      vocab_size=V, tie_embeddings=True, dtype="float32")
+
+
+def bench_loss_stage(B, T, D, V, impl, reps=3):
+    cfg = _mk_cfg(D, V)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    hidden = jax.random.normal(ks[0], (B, T, D), jnp.float32)
+    params = {"embed": {"tok": jax.random.normal(
+        ks[1], (cfg.padded_vocab, D), jnp.float32) * 0.2}}
+    labels = jax.random.randint(ks[2], (B, T), 0, V)
+
+    def f(h, p, lab):
+        return lm_loss(cfg, p, h, lab, impl=impl)[0]
+
+    g = jax.jit(jax.value_and_grad(f, argnums=(0, 1)))
+    lowered = g.lower(hidden, params, labels)
+    compiled = lowered.compile()
+    temp = int(compiled.memory_analysis().temp_size_in_bytes)
+    text = compiled.as_text()
+    max_numel = _max_buffer_numel(text)
+    max_act_numel = _max_buffer_numel(text,
+                                      exclude={cfg.padded_vocab * D})
+    out = g(hidden, params, labels)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(g(hidden, params, labels))
+        best = min(best, time.perf_counter() - t0)
+    model_bytes = (lm_loss_hbm_bytes_fused(B * T, D, cfg.padded_vocab,
+                                           bytes_h=4)
+                   if impl != "unfused" else
+                   lm_loss_hbm_bytes_unfused(B * T, D, cfg.padded_vocab,
+                                             bytes_h=4))
+    return {"B": B, "T": T, "D": D, "V": V, "impl": impl,
+            "temp_bytes": temp, "max_buffer_numel": max_numel,
+            "max_act_buffer_numel": max_act_numel,
+            "has_btv_buffer": bool(max_numel >= B * T * V),
+            "ms": best * 1e3, "model_hbm_bytes": int(model_bytes)}
+
+
+def bench_train_smoke(steps=8):
+    """Full train-step wall time on the smoke config per loss impl."""
+    from repro.configs.gpt2 import GPT2_TINY
+    from repro.data import DataConfig, make_source
+    from repro.train import TrainerConfig, train_loop
+
+    out = {}
+    for impl in ("unfused", "chunked"):
+        set_lm_loss_impl(impl)
+        try:
+            src = make_source(DataConfig(seq_len=64, global_batch=8,
+                                         vocab_size=512, seed=0))
+            tc = TrainerConfig(optimizer="sophia_g", peak_lr=3e-4,
+                               total_steps=steps, hess_interval=4,
+                               hess_subbatch=4, seed=0)
+            # per-step timestamps via the loop callback; steps 0 (hot-path
+            # compile) and 1 (first refresh executes the cond's estimator
+            # branch) are dropped so the gate measures steady-state step
+            # time, not compile time
+            stamps = [time.perf_counter()]
+            _, hist = train_loop(
+                GPT2_TINY, tc, src, num_steps=steps,
+                callback=lambda *_: stamps.append(time.perf_counter()))
+            deltas = [b - a for a, b in zip(stamps[2:-1], stamps[3:])]
+            out[f"{impl}_ms"] = 1e3 * sum(deltas) / len(deltas)
+            out[f"{impl}_loss_final"] = hist[-1]["loss"]
+        finally:
+            set_lm_loss_impl("chunked")
+    out["ratio_chunked_vs_unfused"] = out["chunked_ms"] / out["unfused_ms"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep for CI (seconds, not minutes)")
+    ap.add_argument("--out", default="benchmarks/BENCH_loss.json")
+    args = ap.parse_args()
+
+    # vocab sizes sit past the chunk-size plateau (fused block_v=1024,
+    # chunked chunk=2048): above it the logits-free paths' biggest buffer
+    # is one [rows, chunk] tile, flat in V, while unfused grows as B*T*V
+    # (D chosen so V*D never collides with a rows*chunk tile size — the
+    # weight-buffer exclusion in the activation audit stays unambiguous)
+    if args.smoke:
+        B, T, D = 4, 64, 96
+        vocabs = [4096, 8192]
+    else:
+        B, T, D = 8, 128, 160
+        vocabs = [8192, 16384, 32768]
+
+    rows = []
+    for V in vocabs:
+        for impl in ("unfused", "chunked", "fused"):
+            r = bench_loss_stage(B, T, D, V, impl)
+            rows.append(r)
+            print(f"V={V:6d} {impl:8s} temp={r['temp_bytes']:>12,}B "
+                  f"max_buf={r['max_buffer_numel']:>12,}el "
+                  f"max_act={r['max_act_buffer_numel']:>12,}el "
+                  f"btv={str(r['has_btv_buffer']):5s} {r['ms']:8.2f}ms")
+
+    train = bench_train_smoke()
+    print(f"train smoke: unfused {train['unfused_ms']:.1f}ms/step, "
+          f"chunked (logits-free) {train['chunked_ms']:.1f}ms/step "
+          f"(ratio {train['ratio_chunked_vs_unfused']:.2f})")
+
+    by = lambda impl: [r for r in rows if r["impl"] == impl]  # noqa: E731
+    ok = {
+        # the acceptance criterion: no [B*T, V] residency at any vocab size
+        "fused_logits_free": not any(r["has_btv_buffer"] for r in by("fused")),
+        "chunked_logits_free": not any(r["has_btv_buffer"]
+                                       for r in by("chunked")),
+        # ... and the biggest *activation* buffer (everything except the
+        # V*D weight / d_W, which is a gradient output) is flat in V
+        "fused_v_independent": len({r["max_act_buffer_numel"]
+                                    for r in by("fused")}) == 1,
+        # sanity: the unfused oracle really does materialize it
+        "unfused_materializes": all(r["has_btv_buffer"]
+                                    for r in by("unfused")),
+        # no step-time regression for the compiled logits-free path
+        "no_step_time_regression":
+            train["ratio_chunked_vs_unfused"] <= 1.25,
+    }
+    report = {"smoke": args.smoke, "loss_stage": rows, "train_smoke": train,
+              "ok": ok}
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print("ok:", ok, "->", args.out)
+    if not all(ok.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,13 +13,14 @@ Public API:
 from .types import (GradientTransformation, HessianAwareTransformation,
                     apply_updates, chain, global_norm, tree_zeros_like)
 from .sophia import (SophiaState, scale_by_sophia, sophia, sophia_g, sophia_h)
-from .estimators import (empirical_fisher_estimator,
+from .estimators import (chunked_sampled_stats, empirical_fisher_estimator,
                          empirical_fisher_estimator_flat,
                          empirical_fisher_ghat_flat, exact_diag_hessian,
                          gnb_estimator, gnb_estimator_sq,
                          gnb_estimator_sq_flat, gnb_ghat_flat,
-                         hutchinson_estimator, hutchinson_estimator_flat,
-                         sample_labels, subsample_batch)
+                         gnb_ghat_flat_from_loss, hutchinson_estimator,
+                         hutchinson_estimator_flat, sample_labels,
+                         subsample_batch)
 from .baselines import adahessian, adamw, lion, sgd, signgd
 from .engine import (EngineState, OptimizerEngine, ShardLayout, build_layout,
                      engine_partition_specs, flat_shard_spec,

@@ -13,6 +13,12 @@ computations:
   mini-batch gradient ``ghat`` of the CE loss against the sampled labels, and
   return ``B * ghat * ghat``.  Unbiased for diag of the Gauss-Newton matrix
   (PSD), biased for diag(H).  Uses Bartlett's 1st+2nd identities (eq. 9-13).
+  The sampling and the log-probability come from ONE online vocab-chunk
+  sweep (:func:`chunked_sampled_stats`): chunked Gumbel-argmax draws the
+  label while the same pass accumulates the log-sum-exp, so there is no
+  second softmax and no whole-tensor fp32 ``log_softmax`` copy.  The fully
+  logits-free route (label drawn inside the fused CE kernel's vocab sweep)
+  is :func:`gnb_ghat_flat_from_loss` over ``models.loss.lm_loss_sampled``.
 
 Both take a ``loss_fn``/``logits_fn`` over a (possibly reduced) estimator
 sub-batch — the paper uses 32 of 480 examples for Sophia-H and 240 of 480 for
@@ -89,21 +95,89 @@ def sample_labels(logits: jnp.ndarray, rng: jax.Array) -> jnp.ndarray:
     return jax.random.categorical(rng, logits, axis=-1)
 
 
+_NEG_INF = -1e30
+_DEFAULT_VCHUNK = 4096
+
+
+def chunked_sampled_stats(
+    logits: jnp.ndarray,
+    rng: jax.Array | None = None,
+    *,
+    chunk: int = _DEFAULT_VCHUNK,
+    noise: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One online vocab-chunk sweep: ``(lse, logit_at_yhat, yhat)``.
+
+    Draws ``yhat ~ softmax(logits)`` by online chunked Gumbel-argmax and
+    accumulates the log-sum-exp in the same pass, so the GNB reference
+    needs neither a second softmax nor a whole-tensor fp32 ``log_softmax``
+    copy.  Differentiating ``lse - logit_at_yhat`` w.r.t. ``logits`` gives
+    ``softmax - onehot(yhat)`` — the selects carry the chosen logit's
+    gradient, the draw itself is non-differentiable (stop-grad sampling by
+    construction).  The scan body is checkpointed: backward recomputes each
+    chunk instead of saving [*, V]-sized residuals.
+
+    Per-chunk noise comes from ``fold_in(rng, chunk_idx)``; passing a full
+    ``noise`` tensor instead (tests) makes the online argmax bit-identical
+    to ``jnp.argmax(logits + noise, -1)`` — i.e. with Gumbel noise from a
+    fixed key, identical to ``jax.random.categorical`` on that key.
+    """
+    assert (rng is None) != (noise is None), "exactly one of rng/noise"
+    from ..kernels.fused_ce import (online_argmax_step, online_lse_step,
+                                    vocab_chunk)
+    V = logits.shape[-1]
+    lead = logits.shape[:-1]
+    flat = logits.astype(jnp.float32).reshape(-1, V)
+    nflat = None if noise is None else noise.reshape(-1, V)
+    bv = vocab_chunk(V, chunk)
+    n_c = V // bv
+
+    def body(carry, c):
+        m, l, zm, zi, zl = carry
+        s = jax.lax.dynamic_slice_in_dim(flat, c * bv, bv, axis=1)
+        if nflat is not None:
+            g = jax.lax.dynamic_slice_in_dim(nflat, c * bv, bv, axis=1)
+        else:
+            g = jax.random.gumbel(jax.random.fold_in(rng, c), s.shape,
+                                  jnp.float32)
+        # value-based validity: masked columns arrive as the -1e30
+        # sentinel (models.layers.unembed) rather than a separate mask
+        m, l = online_lse_step(m, l, s, valid=s > _NEG_INF / 2)
+        zm, zi, zl = online_argmax_step((zm, zi, zl), s, s + g, c * bv)
+        return (m, l, zm, zi, zl), None
+
+    N = flat.shape[0]
+    init = (jnp.full((N,), _NEG_INF, jnp.float32),
+            jnp.zeros((N,), jnp.float32),
+            jnp.full((N,), _NEG_INF, jnp.float32),
+            jnp.zeros((N,), jnp.int32),
+            jnp.zeros((N,), jnp.float32))
+    (m, l, _, zi, zl), _ = jax.lax.scan(
+        jax.checkpoint(body), init, jnp.arange(n_c))
+    lse = m + jnp.log(jnp.maximum(l, 1e-37))
+    return lse.reshape(lead), zl.reshape(lead), zi.reshape(lead)
+
+
 def _gnb_ghat(
     logits_fn: Callable[[PyTree], jnp.ndarray],
     params: PyTree,
     rng: jax.Array,
     mask: jnp.ndarray | None,
+    *,
+    chunk: int = _DEFAULT_VCHUNK,
 ) -> Tuple[PyTree, jnp.ndarray]:
     """Shared GNB core: ``(ghat, B)`` — the mini-batch gradient of the mean
     CE against the model's *sampled* labels, and the batch factor B (traced
-    when ``mask`` is given: it counts the step's valid positions)."""
+    when ``mask`` is given: it counts the step's valid positions).
+
+    One :func:`chunked_sampled_stats` sweep serves both the label draw and
+    the log-probability — the old path materialized the logits twice (a
+    Gumbel-max pass plus a whole-tensor fp32 ``log_softmax`` copy)."""
 
     def sampled_loss(p) -> jnp.ndarray:
         logits = logits_fn(p)
-        yhat = sample_labels(jax.lax.stop_gradient(logits), rng)
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        nll = -jnp.take_along_axis(logp, yhat[..., None], axis=-1)[..., 0]
+        lse, ll, _ = chunked_sampled_stats(logits, rng, chunk=chunk)
+        nll = lse - ll
         if mask is not None:
             nll = nll * mask
             return nll.sum() / jnp.maximum(mask.sum(), 1)
@@ -157,6 +231,24 @@ def gnb_ghat_flat(
     from .engine import ravel_shards
     ghat, batch_size = _gnb_ghat(logits_fn, params, rng, mask)
     return ravel_shards(layout, ghat, dtype=jnp.float32), batch_size
+
+
+def gnb_ghat_flat_from_loss(
+    sampled_loss_fn: Callable[[PyTree], Tuple[jnp.ndarray, jnp.ndarray]],
+    params: PyTree,
+    layout,
+) -> Tuple[Tuple[jnp.ndarray, ...], jnp.ndarray]:
+    """GNB ``(ghat shards, B)`` from a model-level sampled-CE loss.
+
+    ``sampled_loss_fn(params) -> (mean_nll, n_valid)`` draws its own labels
+    (e.g. the fused kernel's in-sweep Gumbel-argmax,
+    ``models.loss.lm_loss_sampled``) — the logits-free route: unlike
+    :func:`gnb_ghat_flat` no ``logits_fn`` materializes ``[B*T, V]``
+    anywhere between the trunk and the flat-shard ravel."""
+    from .engine import ravel_shards
+    ghat, n_valid = jax.grad(sampled_loss_fn, has_aux=True)(params)
+    return ravel_shards(layout, ghat, dtype=jnp.float32), \
+        n_valid.astype(jnp.float32)
 
 
 def gnb_estimator_sq_flat(

@@ -5,6 +5,9 @@
 #   ops.py              = per-tensor wrappers for kernel unit tests
 #   flash_attention.py  = fused prefill attention (serve/train long-S path)
 #   decode_attention.py = fused serve decode step over the slot ring cache
+#   fused_ce.py         = logits-free chunked-vocab LM loss + in-sweep GNB
+#                         sampling (custom_vjp; the [B*T, V] logits never
+#                         touch HBM)
 # The production entry point is core/engine.py, which drives the kernels
 # over dtype-homogeneous flat shards (one pallas_call grid sweep per shard).
-from . import decode_attention, ops, ref, sophia_update
+from . import decode_attention, fused_ce, ops, ref, sophia_update

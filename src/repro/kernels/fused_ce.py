@@ -1,0 +1,623 @@
+"""Logits-free fused LM cross-entropy Pallas kernels (chunked vocab sweep).
+
+The training hot path used to materialize the full ``[B*T, V]`` logits
+tensor in HBM — and the GNB Hessian refresh (Algorithm 2) materialized it
+twice (Gumbel-max sampling + an fp32 ``log_softmax`` copy).  At GPT-2-and-up
+vocab sizes that buffer dominates the step's memory peak and its ~5 HBM
+crossings dominate loss-stage bandwidth.  These kernels stream ``lm_head``
+weight *tiles* through VMEM instead, fusing the final projection with an
+online-softmax cross-entropy:
+
+  forward   one (rows, vocab-chunks) grid sweep; per row tile the kernel
+            keeps running (max, sum-exp, label-logit) in VMEM scratch and
+            emits only ``lse`` and ``label_logit`` vectors — ``(N,)`` each.
+  backward  ``custom_vjp``: two more vocab sweeps recompute each logits
+            tile and emit ``d_hidden`` (chunks inner, accumulated in VMEM)
+            and ``d_W`` (rows inner, accumulated in the resident output
+            block) directly from ``softmax - onehot``.  The ``[N, V]``
+            logits (and the fp32 log-probs copy) never touch HBM.
+  sampling  the same forward sweep optionally draws ``yhat ~
+            softmax(logits)`` by online chunked Gumbel-argmax (counter-based
+            hash noise, pure function of ``(seed, row, col)``) and records
+            the chosen column's raw logit, so the Algorithm-2 GNB refresh
+            goes logits-free too: ``nll = lse - logit[yhat]`` with the
+            identical backward.
+
+Compute convention (matches ``models.layers.unembed``): W is cast to the
+hidden dtype, the projection accumulates in fp32
+(``preferred_element_type``), softcap (gemma2) applies in fp32, and
+``padded_vocab`` columns are masked to ``NEG_INF`` — they contribute
+nothing to the CE denominator, are never sampled, and receive exactly zero
+gradient.  Tied embeddings pass W as ``(Vp, D)`` (``transpose_w=False``);
+untied as ``(D, Vp)`` (``transpose_w=True``) — the BlockSpecs stream the
+right tile either way, no host-side transpose.
+
+Validated under ``interpret=True`` against the kernels/ref.py closed-form
+oracles (``lm_loss_grads_ref`` / ``lm_loss_sampled_ref``) to <=3e-6 in
+tests/test_fused_ce.py; on a real TPU the same pallas_call compiles
+natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BN = 256    # rows (B*T positions) per tile
+DEFAULT_BV = 1024   # vocab columns per chunk (multiple of 128)
+NEG_INF = -1e30
+
+_f32 = jnp.float32
+_u32 = jnp.uint32
+
+
+# ---------------------------------------------------------------------------
+# counter-based Gumbel noise (shared by the kernel and the ref.py oracle)
+
+
+def _mix32(x):
+    """lowbias32-style finalizer: uint32 -> well-mixed uint32."""
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(0x7FEB352D)
+    x = x ^ (x >> np.uint32(15))
+    x = x * np.uint32(0x846CA68B)
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def hash_gumbel(seed, rows, cols):
+    """Gumbel(0, 1) noise as a pure function of ``(seed, row, col)``.
+
+    ``seed``: (2,) uint32 (derived from a PRNG key); ``rows``/``cols``:
+    broadcastable int32 global indices.  Chunk-shape independent by
+    construction, so any vocab chunking of the sweep draws the *same*
+    perturbation per (row, column) — online chunked Gumbel-argmax over this
+    noise equals the monolithic argmax, hence a categorical draw.
+    """
+    r = _mix32(rows.astype(_u32) ^ seed[0])
+    x = _mix32(r ^ (cols.astype(_u32) * np.uint32(0x9E3779B9)) ^ seed[1])
+    u = (x >> np.uint32(8)).astype(_f32) * np.float32(1.0 / (1 << 24))
+    u = jnp.clip(u, 1e-7, 1.0 - 1e-7)
+    return -jnp.log(-jnp.log(u))
+
+
+def seed_from_key(rng) -> jnp.ndarray:
+    """(2,) uint32 noise seed derived from a JAX PRNG key."""
+    return jax.random.bits(rng, (2,), _u32)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# the online-reduction rules, shared verbatim by the Pallas kernels, the
+# chunked jnp loss (models/loss.py) and the chunked GNB reference
+# (core/estimators.chunked_sampled_stats) — ONE copy of the trickiest
+# numerics (running-max rescale, masked-chunk guard, strict-> tie handling)
+
+
+def online_lse_step(m, l, s, valid=None):
+    """One vocab chunk of a running log-sum-exp.
+
+    m, l: (rows,) running max / rescaled sum; s: (rows, chunk) fp32 logits;
+    ``valid`` masks columns (without it an all-masked chunk would add
+    exp(0)=1 per column while m sits at the -inf sentinel).  Returns
+    (m_new, l_new); the final lse is ``m + log(l)``."""
+    m_new = jnp.maximum(m, s.max(-1))
+    e = jnp.exp(s - m_new[:, None])
+    if valid is not None:
+        e = jnp.where(valid, e, 0.0)
+    return m_new, l * jnp.exp(m - m_new) + e.sum(-1)
+
+
+def online_argmax_step(best, s, z, c0):
+    """One vocab chunk of a running Gumbel-argmax.
+
+    best = (zm, zi, zl): running perturbed max, its global column index,
+    and the RAW logit at that column; s/z: (rows, chunk) raw / perturbed
+    logits; c0: the chunk's first global column.  Strict ``>`` keeps the
+    earliest index on ties and argmax picks the first within the chunk, so
+    any chunking reproduces the monolithic first-argmax exactly."""
+    zm, zi, zl = best
+    zmax = z.max(-1)
+    zarg = jnp.argmax(z, axis=-1)
+    hit = jax.lax.broadcasted_iota(jnp.int32, z.shape, z.ndim - 1) \
+        == zarg[..., None]
+    chunk_logit = jnp.where(hit, s, 0.0).sum(-1)
+    upd = zmax > zm
+    return (jnp.where(upd, zmax, zm),
+            jnp.where(upd, c0 + zarg, zi),
+            jnp.where(upd, chunk_logit, zl))
+
+
+def vocab_chunk(v: int, want: int, quantum: int = 1) -> int:
+    """Largest multiple of ``quantum`` <= want dividing ``v`` (static)."""
+    b = max(quantum, min(want, v))
+    b -= b % quantum
+    while b >= quantum:
+        if v % b == 0:
+            return b
+        b -= quantum
+    return quantum
+
+
+def rowscale(n_rows: int, mask):
+    """(per-row scale, n_valid): the masked-mean weights ``mask/Σmask``
+    flattened to (n_rows,), or uniform 1/N when unmasked.  ``n_valid`` is
+    the GNB batch factor B."""
+    if mask is None:
+        return jnp.full((n_rows,), 1.0 / n_rows, _f32), \
+            jnp.asarray(float(n_rows), _f32)
+    m = mask.reshape(-1).astype(_f32)
+    n_valid = jnp.maximum(m.sum(), 1.0)
+    return m / n_valid, n_valid
+
+
+# ---------------------------------------------------------------------------
+# shared tile math
+
+
+def _tile_logits(h, w, transpose_w, softcap):
+    """One logits tile in the unembed convention: W cast to the hidden
+    dtype, fp32 accumulation, softcap in fp32.  Returns (z, dcap) with
+    ``dcap`` the softcap derivative factor (None when uncapped)."""
+    wc = w.astype(h.dtype)
+    if transpose_w:                       # w tile (D, bv)
+        raw = jnp.dot(h, wc, preferred_element_type=_f32)
+    else:                                 # w tile (bv, D)
+        raw = jnp.dot(h, wc.T, preferred_element_type=_f32)
+    if softcap is not None:
+        t = jnp.tanh(raw / softcap)
+        return softcap * t, 1.0 - t * t
+    return raw, None
+
+
+def _tile_cols(j, bn, bv):
+    return j * bv + jax.lax.broadcasted_iota(jnp.int32, (bn, bv), 1)
+
+
+# ---------------------------------------------------------------------------
+# forward kernels
+
+
+def _ce_fwd_kernel(lab_ref, h_ref, w_ref, lse_out, ll_out,
+                   m_scr, l_scr, ll_scr, *,
+                   bn, bv, vocab, n_v, transpose_w, softcap):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        ll_scr[...] = jnp.zeros_like(ll_scr[...])
+
+    z, _ = _tile_logits(h_ref[...], w_ref[...], transpose_w, softcap)
+    cols = _tile_cols(j, bn, bv)
+    valid = cols < vocab
+    s = jnp.where(valid, z, NEG_INF)
+
+    m_new, l_new = online_lse_step(m_scr[...][:, 0], l_scr[...][:, 0], s,
+                                   valid)
+    m_scr[...] = m_new[:, None]
+    l_scr[...] = l_new[:, None]
+
+    hit = cols == lab_ref[...][:, None]
+    ll_scr[...] += jnp.where(hit, s, 0.0).sum(-1, keepdims=True)
+
+    @pl.when(j == n_v - 1)
+    def _flush():
+        lse_out[...] = (m_scr[...]
+                        + jnp.log(jnp.maximum(l_scr[...], 1e-37)))[:, 0]
+        ll_out[...] = ll_scr[...][:, 0]
+
+
+def _ce_fwd_sample_kernel(seed_ref, h_ref, w_ref, lse_out, ll_out, yhat_out,
+                          m_scr, l_scr, zm_scr, zi_scr, zl_scr, *,
+                          bn, bv, vocab, n_v, transpose_w, softcap):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        zm_scr[...] = jnp.full_like(zm_scr[...], NEG_INF)
+        zi_scr[...] = jnp.zeros_like(zi_scr[...])
+        zl_scr[...] = jnp.zeros_like(zl_scr[...])
+
+    z, _ = _tile_logits(h_ref[...], w_ref[...], transpose_w, softcap)
+    cols = _tile_cols(j, bn, bv)
+    valid = cols < vocab
+    s = jnp.where(valid, z, NEG_INF)
+
+    m_new, l_new = online_lse_step(m_scr[...][:, 0], l_scr[...][:, 0], s,
+                                   valid)
+    m_scr[...] = m_new[:, None]
+    l_scr[...] = l_new[:, None]
+
+    # online Gumbel-argmax: perturb this chunk, keep the running best,
+    # remembering the winning column's RAW logit so the sampled-label NLL
+    # needs no second pass
+    rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, bv), 0)
+    g = hash_gumbel(seed_ref[...], rows, cols)
+    zp = jnp.where(valid, s + g, NEG_INF)
+    zm, zi, zl = online_argmax_step(
+        (zm_scr[...][:, 0], zi_scr[...][:, 0], zl_scr[...][:, 0]),
+        s, zp, j * bv)
+    zm_scr[...] = zm[:, None]
+    zi_scr[...] = zi[:, None]
+    zl_scr[...] = zl[:, None]
+
+    @pl.when(j == n_v - 1)
+    def _flush():
+        lse_out[...] = (m_scr[...]
+                        + jnp.log(jnp.maximum(l_scr[...], 1e-37)))[:, 0]
+        ll_out[...] = zl_scr[...][:, 0]
+        yhat_out[...] = zi_scr[...][:, 0]
+
+
+# ---------------------------------------------------------------------------
+# backward kernels (shared by the labeled and sampled paths)
+
+
+def _dlogits_tile(h, w, lab, rs, lse, j, *, bn, bv, vocab, transpose_w,
+                  softcap):
+    """Recompute one logits tile and return d_logits_raw (bn, bv) fp32:
+    ``(softmax - onehot(lab)) * rowscale``, softcap chain rule applied,
+    exactly zero on padded columns (p = 0 and onehot = 0 there)."""
+    z, dcap = _tile_logits(h, w, transpose_w, softcap)
+    cols = _tile_cols(j, bn, bv)
+    valid = cols < vocab
+    s = jnp.where(valid, z, NEG_INF)
+    p = jnp.exp(s - lse[:, None])
+    onehot = (cols == lab[:, None]).astype(_f32)
+    d = (p - onehot) * rs[:, None]
+    if dcap is not None:
+        d = d * dcap
+    return d
+
+
+def _ce_bwd_dh_kernel(lab_ref, rs_ref, lse_ref, h_ref, w_ref, dh_out,
+                      acc_scr, *, bn, bv, vocab, n_v, transpose_w, softcap):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    d = _dlogits_tile(h_ref[...], w_ref[...], lab_ref[...], rs_ref[...],
+                      lse_ref[...], j, bn=bn, bv=bv, vocab=vocab,
+                      transpose_w=transpose_w, softcap=softcap)
+    w32 = w_ref[...].astype(_f32)
+    if transpose_w:                       # w tile (D, bv): dh = d @ w^T
+        acc_scr[...] += jnp.dot(d, w32.T, preferred_element_type=_f32)
+    else:                                 # w tile (bv, D): dh = d @ w
+        acc_scr[...] += jnp.dot(d, w32, preferred_element_type=_f32)
+
+    @pl.when(j == n_v - 1)
+    def _flush():
+        dh_out[...] = acc_scr[...].astype(dh_out.dtype)
+
+
+def _ce_bwd_dw_kernel(lab_ref, rs_ref, lse_ref, h_ref, w_ref, dw_out,
+                      acc_scr, *, bn, bv, vocab, n_r, transpose_w, softcap):
+    # grid (chunks, rows): the dW block for chunk j accumulates across the
+    # inner row sweep in an fp32 VMEM scratch (accumulating in the output
+    # dtype would round the partial sum per row tile — per-mille error for
+    # bf16 weights at real tile counts) and rounds ONCE at the flush.
+    j = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    d = _dlogits_tile(h_ref[...], w_ref[...], lab_ref[...], rs_ref[...],
+                      lse_ref[...], j, bn=bn, bv=bv, vocab=vocab,
+                      transpose_w=transpose_w, softcap=softcap)
+    h32 = h_ref[...].astype(_f32)
+    if transpose_w:                       # dW tile (D, bv) = h^T @ d
+        acc_scr[...] += jnp.dot(h32.T, d, preferred_element_type=_f32)
+    else:                                 # dW tile (bv, D) = d^T @ h
+        acc_scr[...] += jnp.dot(d.T, h32, preferred_element_type=_f32)
+
+    @pl.when(i == n_r - 1)
+    def _flush():
+        dw_out[...] = acc_scr[...].astype(dw_out.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+
+
+def _specs(bn, bv, D, transpose_w):
+    h_spec = pl.BlockSpec((bn, D), lambda i, j: (i, 0))
+    w_spec = (pl.BlockSpec((D, bv), lambda i, j: (0, j)) if transpose_w
+              else pl.BlockSpec((bv, D), lambda i, j: (j, 0)))
+    vec_spec = pl.BlockSpec((bn,), lambda i, j: (i,))
+    return h_spec, w_spec, vec_spec
+
+
+def _vp_of(w, transpose_w):
+    return w.shape[1] if transpose_w else w.shape[0]
+
+
+def _ce_forward(h2, w, labels, *, vocab, transpose_w, softcap, bn, bv,
+                interpret):
+    N, D = h2.shape
+    n_r, n_v = N // bn, _vp_of(w, transpose_w) // bv
+    h_spec, w_spec, vec_spec = _specs(bn, bv, D, transpose_w)
+    kern = functools.partial(_ce_fwd_kernel, bn=bn, bv=bv, vocab=vocab,
+                             n_v=n_v, transpose_w=transpose_w,
+                             softcap=softcap)
+    return pl.pallas_call(
+        kern,
+        grid=(n_r, n_v),
+        in_specs=[vec_spec, h_spec, w_spec],
+        out_specs=[vec_spec, vec_spec],
+        out_shape=[jax.ShapeDtypeStruct((N,), _f32),
+                   jax.ShapeDtypeStruct((N,), _f32)],
+        scratch_shapes=[pltpu.VMEM((bn, 1), _f32)] * 3,
+        interpret=interpret,
+    )(labels, h2, w)
+
+
+def _ce_forward_sampled(h2, w, seed, *, vocab, transpose_w, softcap, bn, bv,
+                        interpret):
+    N, D = h2.shape
+    n_r, n_v = N // bn, _vp_of(w, transpose_w) // bv
+    h_spec, w_spec, vec_spec = _specs(bn, bv, D, transpose_w)
+    seed_spec = pl.BlockSpec((2,), lambda i, j: (0,))
+    kern = functools.partial(_ce_fwd_sample_kernel, bn=bn, bv=bv, vocab=vocab,
+                             n_v=n_v, transpose_w=transpose_w,
+                             softcap=softcap)
+    return pl.pallas_call(
+        kern,
+        grid=(n_r, n_v),
+        in_specs=[seed_spec, h_spec, w_spec],
+        out_specs=[vec_spec, vec_spec, vec_spec],
+        out_shape=[jax.ShapeDtypeStruct((N,), _f32),
+                   jax.ShapeDtypeStruct((N,), _f32),
+                   jax.ShapeDtypeStruct((N,), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((bn, 1), _f32),
+                        pltpu.VMEM((bn, 1), _f32),
+                        pltpu.VMEM((bn, 1), _f32),
+                        pltpu.VMEM((bn, 1), jnp.int32),
+                        pltpu.VMEM((bn, 1), _f32)],
+        interpret=interpret,
+    )(seed, h2, w)
+
+
+def _ce_backward(h2, w, labels, rs, lse, *, vocab, transpose_w, softcap,
+                 bn, bv, interpret):
+    """(d_hidden, d_W) from two more vocab sweeps (no [N, V] buffer)."""
+    N, D = h2.shape
+    Vp = _vp_of(w, transpose_w)
+    n_r, n_v = N // bn, Vp // bv
+    h_spec, w_spec, vec_spec = _specs(bn, bv, D, transpose_w)
+    kern_h = functools.partial(_ce_bwd_dh_kernel, bn=bn, bv=bv, vocab=vocab,
+                               n_v=n_v, transpose_w=transpose_w,
+                               softcap=softcap)
+    dh = pl.pallas_call(
+        kern_h,
+        grid=(n_r, n_v),
+        in_specs=[vec_spec, vec_spec, vec_spec, h_spec, w_spec],
+        out_specs=pl.BlockSpec((bn, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, D), h2.dtype),
+        scratch_shapes=[pltpu.VMEM((bn, D), _f32)],
+        interpret=interpret,
+    )(labels, rs, lse, h2, w)
+
+    # rows innermost so each dW chunk block accumulates while resident
+    hT_spec = pl.BlockSpec((bn, D), lambda j, i: (i, 0))
+    wT_spec = (pl.BlockSpec((D, bv), lambda j, i: (0, j)) if transpose_w
+               else pl.BlockSpec((bv, D), lambda j, i: (j, 0)))
+    vT_spec = pl.BlockSpec((bn,), lambda j, i: (i,))
+    kern_w = functools.partial(_ce_bwd_dw_kernel, bn=bn, bv=bv, vocab=vocab,
+                               n_r=n_r, transpose_w=transpose_w,
+                               softcap=softcap)
+    dw = pl.pallas_call(
+        kern_w,
+        grid=(n_v, n_r),
+        in_specs=[vT_spec, vT_spec, vT_spec, hT_spec, wT_spec],
+        out_specs=wT_spec,
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        scratch_shapes=[pltpu.VMEM((D, bv) if transpose_w else (bv, D),
+                                   _f32)],
+        interpret=interpret,
+    )(labels, rs, lse, h2, w)
+    return dh, dw
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp plumbing
+
+
+def _float0(x):
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _fused_nll(h2, w, labels, rowscale, vocab, transpose_w, softcap, bn, bv,
+               interpret):
+    """sum(rowscale * nll) with labels fixed; logits never materialize."""
+    loss, _ = _fused_nll_fwd(h2, w, labels, rowscale, vocab, transpose_w,
+                             softcap, bn, bv, interpret)
+    return loss
+
+
+def _fused_nll_fwd(h2, w, labels, rowscale, vocab, transpose_w, softcap, bn,
+                   bv, interpret):
+    lse, ll = _ce_forward(h2, w, labels, vocab=vocab, transpose_w=transpose_w,
+                          softcap=softcap, bn=bn, bv=bv, interpret=interpret)
+    loss = jnp.sum(rowscale * (lse - ll))
+    return loss, (h2, w, labels, rowscale, lse, ll)
+
+
+def _fused_nll_bwd(vocab, transpose_w, softcap, bn, bv, interpret, res, g):
+    h2, w, labels, rowscale, lse, ll = res
+    rs = (rowscale * g).astype(_f32)
+    dh, dw = _ce_backward(h2, w, labels, rs, lse, vocab=vocab,
+                          transpose_w=transpose_w, softcap=softcap,
+                          bn=bn, bv=bv, interpret=interpret)
+    return dh, dw, _float0(labels), (lse - ll) * g
+
+
+_fused_nll.defvjp(_fused_nll_fwd, _fused_nll_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _fused_sampled_nll(h2, w, seed, rowscale, vocab, transpose_w, softcap,
+                       bn, bv, interpret):
+    """sum(rowscale * nll) against in-sweep sampled labels (GNB path)."""
+    loss, _ = _fused_sampled_nll_fwd(h2, w, seed, rowscale, vocab,
+                                     transpose_w, softcap, bn, bv, interpret)
+    return loss
+
+
+def _fused_sampled_nll_fwd(h2, w, seed, rowscale, vocab, transpose_w,
+                           softcap, bn, bv, interpret):
+    lse, ll, yhat = _ce_forward_sampled(
+        h2, w, seed, vocab=vocab, transpose_w=transpose_w, softcap=softcap,
+        bn=bn, bv=bv, interpret=interpret)
+    loss = jnp.sum(rowscale * (lse - ll))
+    return loss, (h2, w, seed, yhat, rowscale, lse, ll)
+
+
+def _fused_sampled_nll_bwd(vocab, transpose_w, softcap, bn, bv, interpret,
+                           res, g):
+    h2, w, seed, yhat, rowscale, lse, ll = res
+    rs = (rowscale * g).astype(_f32)
+    dh, dw = _ce_backward(h2, w, yhat, rs, lse, vocab=vocab,
+                          transpose_w=transpose_w, softcap=softcap,
+                          bn=bn, bv=bv, interpret=interpret)
+    return dh, dw, _float0(seed), (lse - ll) * g
+
+
+_fused_sampled_nll.defvjp(_fused_sampled_nll_fwd, _fused_sampled_nll_bwd)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+
+
+def _pick_block(n, want, quantum):
+    """Largest multiple of ``quantum`` <= want dividing n, else (quantum,
+    pad) where pad rounds n up to a quantum multiple."""
+    want = max(quantum, min(want, n))
+    b = (want // quantum) * quantum
+    while b >= quantum:
+        if n % b == 0:
+            return b, 0
+        b -= quantum
+    return quantum, (-n) % quantum
+
+
+def _prep(hidden, labels_or_none, mask, block_n):
+    """Flatten leading dims and pad rows to a block multiple (padded rows
+    carry rowscale 0, so they contribute nothing to loss or gradients)."""
+    D = hidden.shape[-1]
+    h2 = hidden.reshape(-1, D)
+    N = h2.shape[0]
+    rs, n_valid = rowscale(N, mask)
+    bn, pad = _pick_block(N, block_n, 8)
+    if pad:
+        h2 = jnp.pad(h2, ((0, pad), (0, 0)))
+        rs = jnp.pad(rs, (0, pad))
+    lab = None
+    if labels_or_none is not None:
+        lab = labels_or_none.reshape(-1).astype(jnp.int32)
+        if pad:
+            lab = jnp.pad(lab, (0, pad))
+    return h2, lab, rs, n_valid, bn
+
+
+def _pick_bv(Vp, block_v):
+    assert Vp % 128 == 0, f"padded vocab {Vp} not a multiple of 128"
+    return vocab_chunk(Vp, block_v, 128)
+
+
+def fused_lm_loss(hidden, w, labels, mask=None, *, vocab_size,
+                  transpose_w=False, softcap=None, block_n=DEFAULT_BN,
+                  block_v=DEFAULT_BV, interpret=None):
+    """Masked-mean LM cross-entropy without materializing logits.
+
+    hidden (..., D); w (Vp, D) tied or (D, Vp) untied (``transpose_w``);
+    labels (...) int; mask (...) optional.  Returns ``(loss, n_valid)`` —
+    the batch factor the GNB refresh folds into the Hessian-EMA.
+    Differentiable in ``hidden`` and ``w`` via the fused backward sweeps.
+    """
+    h2, lab, rs, n_valid, bn = _prep(hidden, labels, mask, block_n)
+    bv = _pick_bv(_vp_of(w, transpose_w), block_v)
+    softcap = float(softcap) if softcap else None
+    interpret = _interpret_default() if interpret is None else interpret
+    loss = _fused_nll(h2, w, lab, rs, int(vocab_size), bool(transpose_w),
+                      softcap, bn, bv, bool(interpret))
+    return loss, n_valid
+
+
+def fused_lm_loss_sampled(hidden, w, rng, mask=None, *, vocab_size,
+                          transpose_w=False, softcap=None, block_n=DEFAULT_BN,
+                          block_v=DEFAULT_BV, interpret=None):
+    """GNB sampled-label CE in one sweep: draws ``yhat ~ softmax(logits)``
+    by online chunked Gumbel-argmax *inside* the forward kernel and returns
+    the masked-mean NLL against it (``(loss, n_valid)``).  The gradient of
+    ``loss`` is Algorithm 2's ``ghat`` contribution through this stage —
+    logits-free in both directions."""
+    h2, _, rs, n_valid, bn = _prep(hidden, None, mask, block_n)
+    bv = _pick_bv(_vp_of(w, transpose_w), block_v)
+    softcap = float(softcap) if softcap else None
+    interpret = _interpret_default() if interpret is None else interpret
+    seed = seed_from_key(rng)
+    loss = _fused_sampled_nll(h2, w, seed, rs, int(vocab_size),
+                              bool(transpose_w), softcap, bn, bv,
+                              bool(interpret))
+    return loss, n_valid
+
+
+def fused_lm_sample(hidden, w, rng, *, vocab_size, transpose_w=False,
+                    softcap=None, block_n=DEFAULT_BN, block_v=DEFAULT_BV,
+                    interpret=None):
+    """The sampled labels alone (tests / diagnostics): yhat shaped like
+    ``hidden[..., 0]``."""
+    shp = hidden.shape[:-1]
+    h2, _, _, _, bn = _prep(hidden, None, None, block_n)
+    bv = _pick_bv(_vp_of(w, transpose_w), block_v)
+    softcap = float(softcap) if softcap else None
+    interpret = _interpret_default() if interpret is None else interpret
+    _, _, yhat = _ce_forward_sampled(
+        h2, w, seed_from_key(rng), vocab=int(vocab_size),
+        transpose_w=bool(transpose_w), softcap=softcap, bn=bn, bv=bv,
+        interpret=bool(interpret))
+    n = 1
+    for s in shp:
+        n *= s
+    return yhat[:n].reshape(shp)
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM traffic (roofline overlay, analogous to
+# flash_attention.attention_hbm_bytes_flash)
+
+
+def lm_loss_hbm_bytes_fused(N, D, V, *, bytes_h=2, bytes_w=4) -> int:
+    """Fused path: hidden and W stream once per sweep (1 forward + 2
+    backward), outputs are d_hidden + d_W + four (N,) vectors.  No term
+    scales with N*V."""
+    h = N * D * bytes_h
+    wb = V * D * bytes_w
+    vecs = 4 * N * 4
+    return 3 * (h + wb) + h + wb + vecs
+
+
+def lm_loss_hbm_bytes_unfused(N, D, V, *, bytes_h=2, bytes_w=4,
+                              passes=5) -> int:
+    """Unfused XLA path: the fp32 [N, V] logits cross HBM ~``passes``
+    times (projection write, log_softmax read/write, NLL gather read,
+    backward softmax read) on top of the projection operands."""
+    return N * V * 4 * passes + 2 * (N * D * bytes_h + V * D * bytes_w)

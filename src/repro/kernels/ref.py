@@ -133,6 +133,103 @@ def decode_attention_ref(q, k_cache, v_cache, positions, *, scale=None,
                       vx.astype(jnp.float32)).astype(q.dtype)
 
 
+def _lm_logits_ref(hidden, w, *, vocab_size, transpose_w, softcap):
+    """Full-logits tile math in the fused-CE convention (fused_ce.py):
+    W cast to the hidden dtype, fp32 accumulation, softcap in fp32, padded
+    columns masked to -1e30.  Returns (s, dcap, h2) with ``dcap`` the
+    softcap derivative factor (ones when uncapped)."""
+    D = hidden.shape[-1]
+    h2 = hidden.reshape(-1, D)
+    wc = w.astype(hidden.dtype)
+    if transpose_w:
+        raw = jnp.dot(h2, wc, preferred_element_type=jnp.float32)
+    else:
+        raw = jnp.dot(h2, wc.T, preferred_element_type=jnp.float32)
+    if softcap:
+        t = jnp.tanh(raw / softcap)
+        raw = softcap * t
+        dcap = 1.0 - t * t
+    else:
+        dcap = jnp.ones_like(raw)
+    cols = jnp.arange(raw.shape[-1])[None, :]
+    return jnp.where(cols < vocab_size, raw, -1e30), dcap, h2
+
+
+def _rowscale_ref(shape_lead, mask):
+    from .fused_ce import rowscale
+    n = 1
+    for s in shape_lead:
+        n *= s
+    return rowscale(n, mask)
+
+
+def lm_loss_ref(hidden, w, labels, mask=None, *, vocab_size,
+                transpose_w=False, softcap=None):
+    """Materialized-logits oracle for the fused LM loss (differentiable)."""
+    s, _, _ = _lm_logits_ref(hidden, w, vocab_size=vocab_size,
+                             transpose_w=transpose_w, softcap=softcap)
+    lse = jax.nn.logsumexp(s, axis=-1)
+    lab = labels.reshape(-1)
+    ll = jnp.take_along_axis(s, lab[:, None], axis=1)[:, 0]
+    rs, _ = _rowscale_ref(hidden.shape[:-1], mask)
+    return jnp.sum(rs * (lse - ll))
+
+
+def _lm_grads_from_labels(h2, w, s, dcap, lab, rs, *, transpose_w, cot):
+    """Closed-form (loss, d_hidden, d_W) mirroring the fused kernels'
+    fp32 compute exactly (the <=3e-6 parity oracle — autodiff through the
+    bf16 cast chain would round at different points)."""
+    lse = jax.nn.logsumexp(s, axis=-1)
+    ll = jnp.take_along_axis(s, lab[:, None], axis=1)[:, 0]
+    loss = jnp.sum(rs * (lse - ll))
+    p = jnp.exp(s - lse[:, None])
+    onehot = (jnp.arange(s.shape[-1])[None, :] == lab[:, None]) \
+        .astype(jnp.float32)
+    d = (p - onehot) * (rs * cot)[:, None] * dcap
+    w32 = w.astype(jnp.float32)
+    h32 = h2.astype(jnp.float32)
+    if transpose_w:
+        dh = d @ w32.T
+        dw = h32.T @ d
+    else:
+        dh = d @ w32
+        dw = d.T @ h32
+    return loss, dh.astype(h2.dtype), dw.astype(w.dtype)
+
+
+def lm_loss_grads_ref(hidden, w, labels, mask=None, *, vocab_size,
+                      transpose_w=False, softcap=None, cot=1.0):
+    """(loss, d_hidden, d_W) closed form; ``cot`` is the loss cotangent."""
+    s, dcap, h2 = _lm_logits_ref(hidden, w, vocab_size=vocab_size,
+                                 transpose_w=transpose_w, softcap=softcap)
+    rs, _ = _rowscale_ref(hidden.shape[:-1], mask)
+    loss, dh, dw = _lm_grads_from_labels(h2, w, s, dcap, labels.reshape(-1),
+                                         rs, transpose_w=transpose_w,
+                                         cot=cot)
+    return loss, dh.reshape(hidden.shape), dw
+
+
+def lm_loss_sampled_ref(hidden, w, rng, mask=None, *, vocab_size,
+                        transpose_w=False, softcap=None, cot=1.0):
+    """(loss, yhat, d_hidden, d_W) for the GNB sampled-label path, drawing
+    the SAME counter-based Gumbel noise as the kernel (full [N, V] grid —
+    tests only)."""
+    from .fused_ce import hash_gumbel, seed_from_key
+    s, dcap, h2 = _lm_logits_ref(hidden, w, vocab_size=vocab_size,
+                                 transpose_w=transpose_w, softcap=softcap)
+    N, V = s.shape
+    rows = jnp.arange(N, dtype=jnp.int32)[:, None]
+    cols = jnp.arange(V, dtype=jnp.int32)[None, :]
+    g = hash_gumbel(seed_from_key(rng), rows, cols)
+    z = jnp.where(cols < vocab_size, s + g, -1e30)
+    yhat = jnp.argmax(z, axis=-1).astype(jnp.int32)
+    rs, _ = _rowscale_ref(hidden.shape[:-1], mask)
+    loss, dh, dw = _lm_grads_from_labels(h2, w, s, dcap, yhat, rs,
+                                         transpose_w=transpose_w, cot=cot)
+    return loss, yhat.reshape(hidden.shape[:-1]), \
+        dh.reshape(hidden.shape), dw
+
+
 def adamw_fused_ref(p, m, v, g, *, lr, beta1, beta2, eps, weight_decay,
                     step):
     """Fused AdamW step (baseline gets the same kernel treatment so the

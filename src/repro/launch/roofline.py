@@ -113,6 +113,21 @@ def dominant_term(terms: dict) -> str:
     return max(t, key=t.get)
 
 
+def loss_stage_seconds(batch_tokens: int, d_model: int, padded_vocab: int,
+                       *, fused: bool, bytes_act: int = 2) -> float:
+    """HBM-bound time of the LM loss+grad stage (the roofline overlay for
+    the fused chunked-vocab CE, analogous to the flash-attention term).
+
+    ``fused=False`` models the legacy path's ~5 HBM crossings of the fp32
+    ``[B*T, V]`` logits; ``fused=True`` models the logits-free kernel
+    (kernels/fused_ce.py): 3 streams of hidden+W, no N*V term."""
+    from ..kernels.fused_ce import (lm_loss_hbm_bytes_fused,
+                                    lm_loss_hbm_bytes_unfused)
+    fn = lm_loss_hbm_bytes_fused if fused else lm_loss_hbm_bytes_unfused
+    return fn(batch_tokens, d_model, padded_vocab,
+              bytes_h=bytes_act) / HBM_BW
+
+
 def model_flops_train(n_params_active: int, tokens: int) -> float:
     """6*N*D per step (fwd+bwd)."""
     return 6.0 * n_params_active * tokens

@@ -113,6 +113,9 @@ def main(argv=None):
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--remat", default="none")
     ap.add_argument("--fused-kernel", action="store_true")
+    ap.add_argument("--fused-loss", action="store_true",
+                    help="Pallas logits-free LM loss + in-sweep GNB "
+                         "sampling (kernels/fused_ce.py)")
     ap.add_argument("--compress-grads", action="store_true",
                     help="in-collective int8 all-reduce over the fsdp axis")
     ap.add_argument("--compress-hess", action="store_true",
@@ -146,7 +149,8 @@ def main(argv=None):
         weight_decay=args.weight_decay, gamma=args.gamma,
         hess_interval=args.hess_interval, hess_subbatch=args.hess_subbatch,
         grad_accum=args.grad_accum, remat=args.remat,
-        fused_kernel=args.fused_kernel, compress_grads=args.compress_grads,
+        fused_kernel=args.fused_kernel, fused_loss=args.fused_loss,
+        compress_grads=args.compress_grads,
         compress_hess=args.compress_hess,
         state_dtype=args.state_dtype, seed=args.seed)
     src = make_source(DataConfig(

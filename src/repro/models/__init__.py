@@ -1,2 +1,4 @@
 from .common import ModelConfig
 from .registry import get_model
+from .loss import (get_lm_loss_impl, lm_loss, lm_loss_sampled,
+                   set_lm_loss_impl, unembed_weights)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from ..distributed.sharding import constrain
 from .common import ModelConfig
-from .layers import (cross_entropy, decode_attention,
+from .layers import (decode_attention,
                      decode_attention_slots, dense_init, embed,
                      full_attention, init_attention, init_embedding,
                      init_mlp, mlp, prefill_chunk_attention, rms_norm,
@@ -87,8 +87,10 @@ def _cross_kv(p, enc_out, cfg: ModelConfig):
     return k, v
 
 
-def decode_train(cfg: ModelConfig, params, tokens, enc_out, *, remat="none"):
-    """Teacher-forced decoder pass. tokens (B, S_tgt) -> logits."""
+def decode_train_hidden(cfg: ModelConfig, params, tokens, enc_out, *,
+                        remat="none"):
+    """Teacher-forced decoder trunk. tokens (B, S_tgt) -> final-norm
+    hidden (the loss paths skip the unembedding; models/loss.py)."""
     B, S = tokens.shape
     x = embed(params["embed"], tokens, cfg)
     positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
@@ -107,22 +109,46 @@ def decode_train(cfg: ModelConfig, params, tokens, enc_out, *, remat="none"):
     if remat == "full":
         body = jax.checkpoint(body)
     x, _ = jax.lax.scan(body, x, params["decoder"])
-    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+
+
+def decode_train(cfg: ModelConfig, params, tokens, enc_out, *, remat="none"):
+    """Teacher-forced decoder pass. tokens (B, S_tgt) -> logits."""
+    x = decode_train_hidden(cfg, params, tokens, enc_out, remat=remat)
     return unembed(params["embed"], x, cfg)
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens, *, frames=None,
+                   remat="none", **_):
+    enc_out = encode(cfg, params, frames, remat=remat)
+    return decode_train_hidden(cfg, params, tokens, enc_out, remat=remat), \
+        jnp.zeros((), jnp.float32)
 
 
 def forward(cfg: ModelConfig, params, tokens, *, frames=None, remat="none",
             **_):
-    enc_out = encode(cfg, params, frames, remat=remat)
-    return decode_train(cfg, params, tokens, enc_out, remat=remat), \
-        jnp.zeros((), jnp.float32)
+    hidden, aux = forward_hidden(cfg, params, tokens, frames=frames,
+                                 remat=remat)
+    return unembed(params["embed"], hidden, cfg), aux
 
 
-def loss_fn(cfg: ModelConfig, params, batch, *, remat="none", **_):
-    logits, aux = forward(cfg, params, batch["tokens"],
-                          frames=batch["frames"], remat=remat)
-    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+def loss_fn(cfg: ModelConfig, params, batch, *, remat="none",
+            loss_impl=None, **_):
+    from .loss import lm_loss
+    hidden, aux = forward_hidden(cfg, params, batch["tokens"],
+                                 frames=batch["frames"], remat=remat)
+    ce, _ = lm_loss(cfg, params, hidden, batch["labels"],
+                    batch.get("mask"), impl=loss_impl)
     return ce + aux, {"ce": ce, "aux": aux}
+
+
+def sampled_loss_fn(cfg: ModelConfig, params, batch, rng, *, remat="none",
+                    loss_impl=None, **_):
+    from .loss import lm_loss_sampled
+    hidden, _ = forward_hidden(cfg, params, batch["tokens"],
+                               frames=batch["frames"], remat=remat)
+    return lm_loss_sampled(cfg, params, hidden, rng, batch.get("mask"),
+                           impl=loss_impl)
 
 
 def logits_fn(cfg: ModelConfig, params, batch, **_):

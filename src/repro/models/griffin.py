@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from ..distributed.sharding import constrain
 from .common import ModelConfig
-from .layers import (chunked_attention, cross_entropy, decode_attention,
+from .layers import (chunked_attention, decode_attention,
                      decode_attention_slots, dense_init, embed,
                      full_attention, init_attention, init_embedding,
                      init_mlp, mlp, rms_norm, slot_slice, slot_update,
@@ -175,8 +175,10 @@ def attn_block_apply(p, x, cfg: ModelConfig, positions, attn_impl="auto"):
 # forward / loss
 
 
-def forward(cfg: ModelConfig, params, tokens, *, attn_impl="auto",
-            remat="none", last_only=False, **_):
+def forward_hidden(cfg: ModelConfig, params, tokens, *, attn_impl="auto",
+                   remat="none", last_only=False, **_):
+    """Trunk -> (final-norm hidden, aux); the loss paths skip the
+    unembedding projection entirely (models/loss.py)."""
     B, S = tokens.shape
     x = embed(params["embed"], tokens, cfg)
     positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
@@ -198,13 +200,31 @@ def forward(cfg: ModelConfig, params, tokens, *, attn_impl="auto",
     if last_only:
         x = x[:, -1:]
     x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
-    return unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+    return x, jnp.zeros((), jnp.float32)
 
 
-def loss_fn(cfg: ModelConfig, params, batch, *, remat="none", **_):
-    logits, aux = forward(cfg, params, batch["tokens"], remat=remat)
-    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+def forward(cfg: ModelConfig, params, tokens, *, attn_impl="auto",
+            remat="none", last_only=False, **_):
+    x, aux = forward_hidden(cfg, params, tokens, attn_impl=attn_impl,
+                            remat=remat, last_only=last_only)
+    return unembed(params["embed"], x, cfg), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, remat="none",
+            loss_impl=None, **_):
+    from .loss import lm_loss
+    hidden, aux = forward_hidden(cfg, params, batch["tokens"], remat=remat)
+    ce, _ = lm_loss(cfg, params, hidden, batch["labels"],
+                    batch.get("mask"), impl=loss_impl)
     return ce, {"ce": ce, "aux": aux}
+
+
+def sampled_loss_fn(cfg: ModelConfig, params, batch, rng, *, remat="none",
+                    loss_impl=None, **_):
+    from .loss import lm_loss_sampled
+    hidden, _ = forward_hidden(cfg, params, batch["tokens"], remat=remat)
+    return lm_loss_sampled(cfg, params, hidden, rng, batch.get("mask"),
+                           impl=loss_impl)
 
 
 def logits_fn(cfg: ModelConfig, params, batch, **_):

@@ -459,15 +459,30 @@ def embed(p, tokens, cfg: ModelConfig, positions=None):
     return constrain(x, "batch", None, None)
 
 
+NEG_INF_LOGIT = -1e30  # masked-column sentinel (exp -> 0, argmax-proof)
+
+
 def unembed(p, x, cfg: ModelConfig):
+    """hidden -> fp32 logits over ``padded_vocab``, with the padding
+    columns masked to :data:`NEG_INF_LOGIT` so they never enter a CE
+    denominator, never win an argmax, are never sampled, and receive
+    exactly zero gradient (``where`` routes their cotangent to the zero
+    branch).  The projection accumulates in fp32 even for bf16 activations
+    (``preferred_element_type``) — the same convention as the fused loss
+    kernel (kernels/fused_ce.py), so fused and unfused paths move bytes,
+    not math."""
     dt = x.dtype
     if cfg.tie_embeddings:
-        logits = x @ p["tok"].T.astype(dt)
+        logits = jnp.matmul(x, p["tok"].T.astype(dt),
+                            preferred_element_type=jnp.float32)
     else:
-        logits = x @ p["unembed"].astype(dt)
-    logits = logits.astype(jnp.float32)
+        logits = jnp.matmul(x, p["unembed"].astype(dt),
+                            preferred_element_type=jnp.float32)
     if cfg.final_logit_softcap:
         logits = _softcap(logits, cfg.final_logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        cols = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(cols < cfg.vocab_size, logits, NEG_INF_LOGIT)
     return constrain(logits, "batch", None, "model")
 
 

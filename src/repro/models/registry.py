@@ -9,9 +9,12 @@ from .common import ModelConfig
 
 def get_model(cfg: ModelConfig) -> SimpleNamespace:
     """Returns a namespace of the family's functions:
-    init_params, forward, loss_fn, logits_fn, decode_step, the
-    family-appropriate cache/state constructor, and the serve-engine slot
-    protocol (uniform across families — callers never branch on family):
+    init_params, forward, forward_hidden (trunk -> final-norm hidden, the
+    logits-free loss entry), loss_fn, sampled_loss_fn (GNB sampled-label
+    NLL -> (nll, n_valid); see models/loss.py), logits_fn, decode_step,
+    the family-appropriate cache/state constructor, and the serve-engine
+    slot protocol (uniform across families — callers never branch on
+    family):
 
         init_slots(cfg, n_slots, cache_len)            -> slot state pytree
         prefill_into_slot(cfg, params, state, slot,
@@ -27,7 +30,9 @@ def get_model(cfg: ModelConfig) -> SimpleNamespace:
         return SimpleNamespace(
             init_params=transformer.init_params,
             forward=transformer.forward,
+            forward_hidden=transformer.forward_hidden,
             loss_fn=transformer.loss_fn,
+            sampled_loss_fn=transformer.sampled_loss_fn,
             logits_fn=transformer.logits_fn,
             decode_step=transformer.decode_step,
             prefill=transformer.prefill,
@@ -41,7 +46,9 @@ def get_model(cfg: ModelConfig) -> SimpleNamespace:
         return SimpleNamespace(
             init_params=rwkv.init_params,
             forward=rwkv.forward,
+            forward_hidden=rwkv.forward_hidden,
             loss_fn=rwkv.loss_fn,
+            sampled_loss_fn=rwkv.sampled_loss_fn,
             logits_fn=rwkv.logits_fn,
             decode_step=rwkv.decode_step,
             init_cache=lambda c, b, _len=None: rwkv.init_state(c, b),
@@ -54,7 +61,9 @@ def get_model(cfg: ModelConfig) -> SimpleNamespace:
         return SimpleNamespace(
             init_params=griffin.init_params,
             forward=griffin.forward,
+            forward_hidden=griffin.forward_hidden,
             loss_fn=griffin.loss_fn,
+            sampled_loss_fn=griffin.sampled_loss_fn,
             logits_fn=griffin.logits_fn,
             decode_step=griffin.decode_step,
             init_cache=lambda c, b, _len=None: griffin.init_state(c, b),
@@ -67,7 +76,9 @@ def get_model(cfg: ModelConfig) -> SimpleNamespace:
         return SimpleNamespace(
             init_params=encdec.init_params,
             forward=encdec.forward,
+            forward_hidden=encdec.forward_hidden,
             loss_fn=encdec.loss_fn,
+            sampled_loss_fn=encdec.sampled_loss_fn,
             logits_fn=encdec.logits_fn,
             decode_step=encdec.decode_step,
             init_cache=encdec.init_cache,

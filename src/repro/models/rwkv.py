@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from ..distributed.sharding import constrain
 from .common import ModelConfig
-from .layers import cross_entropy, dense_init, embed, embed_init, rms_norm, unembed
+from .layers import dense_init, embed, embed_init, rms_norm, unembed
 
 HEAD_DIM = 64
 DECAY_LORA = 64
@@ -224,8 +224,10 @@ def init_state(cfg: ModelConfig, batch_size: int) -> dict:
         lambda z: jnp.broadcast_to(z[None], (cfg.n_layers,) + z.shape), one)
 
 
-def forward(cfg: ModelConfig, params, tokens, *, state=None, remat="none",
-            chunked=True, last_only=False, **_):
+def forward_hidden(cfg: ModelConfig, params, tokens, *, state=None,
+                   remat="none", chunked=True, last_only=False, **_):
+    """Trunk -> (final-norm hidden, aux, new_state); the loss paths skip
+    the unembedding projection entirely (models/loss.py)."""
     B, S = tokens.shape
     x = embed(params["embed"], tokens, cfg)
     if state is None:
@@ -249,13 +251,33 @@ def forward(cfg: ModelConfig, params, tokens, *, state=None, remat="none",
     if last_only:
         x = x[:, -1:]
     x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
-    return unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32), new_state
+    return x, jnp.zeros((), jnp.float32), new_state
 
 
-def loss_fn(cfg: ModelConfig, params, batch, *, remat="none", **_):
-    logits, aux, _ = forward(cfg, params, batch["tokens"], remat=remat)
-    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+def forward(cfg: ModelConfig, params, tokens, *, state=None, remat="none",
+            chunked=True, last_only=False, **_):
+    x, aux, new_state = forward_hidden(cfg, params, tokens, state=state,
+                                       remat=remat, chunked=chunked,
+                                       last_only=last_only)
+    return unembed(params["embed"], x, cfg), aux, new_state
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, remat="none",
+            loss_impl=None, **_):
+    from .loss import lm_loss
+    hidden, aux, _ = forward_hidden(cfg, params, batch["tokens"],
+                                    remat=remat)
+    ce, _ = lm_loss(cfg, params, hidden, batch["labels"],
+                    batch.get("mask"), impl=loss_impl)
     return ce, {"ce": ce, "aux": aux}
+
+
+def sampled_loss_fn(cfg: ModelConfig, params, batch, rng, *, remat="none",
+                    loss_impl=None, **_):
+    from .loss import lm_loss_sampled
+    hidden, _, _ = forward_hidden(cfg, params, batch["tokens"], remat=remat)
+    return lm_loss_sampled(cfg, params, hidden, rng, batch.get("mask"),
+                           impl=loss_impl)
 
 
 def logits_fn(cfg: ModelConfig, params, batch, **_):

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from .common import ModelConfig
-from .layers import (apply_rope, chunked_attention, cross_entropy,
+from .layers import (apply_rope, chunked_attention,
                      decode_attention, decode_attention_slots, dense_init,
                      embed, embed_init, full_attention, init_attention,
                      init_embedding, init_mlp, layer_norm, mlp,
@@ -179,10 +179,13 @@ def _embed_inputs(cfg, params, tokens, positions, patch_embeds):
     return x, rope_pos
 
 
-def forward(cfg: ModelConfig, params, tokens, *, positions=None,
-            patch_embeds=None, attn_impl: str = "auto",
-            remat: str = "none"):
-    """tokens (B, S) -> logits (B, S, V) fp32, aux (MoE load-balance loss)."""
+def forward_hidden(cfg: ModelConfig, params, tokens, *, positions=None,
+                   patch_embeds=None, attn_impl: str = "auto",
+                   remat: str = "none"):
+    """tokens (B, S) -> (final-norm hidden (B, S, D), aux).  The trunk
+    shared by :func:`forward` and the logits-free loss paths — the
+    unembedding projection happens inside ``models.loss.lm_loss`` (or not
+    at all, for the fused kernel)."""
     x, positions = _embed_inputs(cfg, params, tokens, positions, patch_embeds)
     windows = layer_windows(cfg, tokens.shape[1])
     scales = layer_scales(cfg)
@@ -234,22 +237,52 @@ def forward(cfg: ModelConfig, params, tokens, *, positions=None,
         (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
                                    (params["layers"], windows, scales))
     x = _norm(params["final_norm"], x, cfg)
+    return x, aux
+
+
+def forward(cfg: ModelConfig, params, tokens, *, positions=None,
+            patch_embeds=None, attn_impl: str = "auto",
+            remat: str = "none"):
+    """tokens (B, S) -> logits (B, S, V) fp32, aux (MoE load-balance loss)."""
+    x, aux = forward_hidden(cfg, params, tokens, positions=positions,
+                            patch_embeds=patch_embeds, attn_impl=attn_impl,
+                            remat=remat)
     return unembed(params["embed"], x, cfg), aux
 
 
 def loss_fn(cfg: ModelConfig, params, batch, *, attn_impl="auto",
-            remat="none"):
-    """batch: {tokens, labels, [mask], [patch_embeds]} -> (loss, metrics)."""
-    logits, aux = forward(cfg, params, batch["tokens"],
-                          patch_embeds=batch.get("patch_embeds"),
-                          positions=batch.get("positions"),
-                          attn_impl=attn_impl, remat=remat)
-    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+            remat="none", loss_impl=None):
+    """batch: {tokens, labels, [mask], [patch_embeds]} -> (loss, metrics).
+
+    The CE runs through ``models.loss.lm_loss`` (fused / chunked /
+    unfused per ``loss_impl``) — the default never materializes the
+    [B, S, V] logits."""
+    from .loss import lm_loss
+    hidden, aux = forward_hidden(cfg, params, batch["tokens"],
+                                 patch_embeds=batch.get("patch_embeds"),
+                                 positions=batch.get("positions"),
+                                 attn_impl=attn_impl, remat=remat)
+    ce, _ = lm_loss(cfg, params, hidden, batch["labels"],
+                    batch.get("mask"), impl=loss_impl)
     return ce + aux, {"ce": ce, "aux": aux}
+
+
+def sampled_loss_fn(cfg: ModelConfig, params, batch, rng, *,
+                    attn_impl="auto", remat="none", loss_impl=None):
+    """GNB sampled-label NLL (Algorithm 2): ``(nll, n_valid)`` with labels
+    drawn from the model's own softmax inside the loss sweep."""
+    from .loss import lm_loss_sampled
+    hidden, _ = forward_hidden(cfg, params, batch["tokens"],
+                               patch_embeds=batch.get("patch_embeds"),
+                               positions=batch.get("positions"),
+                               attn_impl=attn_impl, remat=remat)
+    return lm_loss_sampled(cfg, params, hidden, rng, batch.get("mask"),
+                           impl=loss_impl)
 
 
 def logits_fn(cfg: ModelConfig, params, batch, **kw):
     """Logits view for the GNB estimator (Algorithm 2 line 3)."""
+    kw.pop("loss_impl", None)
     logits, _ = forward(cfg, params, batch["tokens"],
                         patch_embeds=batch.get("patch_embeds"),
                         positions=batch.get("positions"), **kw)

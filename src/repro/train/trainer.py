@@ -28,6 +28,18 @@ executes the whole update as a single fused Pallas grid sweep per shard
 (``fused_kernel=True``) or the identical-layout pure-jnp reference.  The
 LR schedule is evaluated once per step and handed to the engine as a
 traced scalar; the GNB batch factor B stays a traced scalar too.
+
+The hot-path LM loss is logits-free: ``loss_fn`` routes the trunk's
+final-norm hidden states through ``models.loss.lm_loss`` (chunked-vocab
+sweep by default; the Pallas fused kernel with ``fused_loss=True``), so
+the ``[B*T, V]`` logits tensor never materializes on ordinary steps.  The
+GNB refresh branch is logits-free only with ``fused_loss=True``, where
+``yhat ~ softmax(logits)`` is drawn *inside* the kernel's vocab sweep
+(``sampled_loss_fn`` -> ``gnb_ghat_flat_from_loss``) and B = the sweep's
+valid-position count folds into the fused Hessian-EMA as a traced scalar;
+the default refresh still materializes the estimator *sub-batch*'s logits
+once via ``logits_fn`` (its single chunked sweep eliminates the second
+fp32 ``log_softmax`` copy, not the buffer itself).
 """
 from __future__ import annotations
 
@@ -39,8 +51,9 @@ import jax.numpy as jnp
 
 from ..core import (OptimizerEngine, clip_by_global_norm,
                     empirical_fisher_ghat_flat, gnb_ghat_flat,
-                    hessian_aware_optimizer, hutchinson_estimator_flat,
-                    linear_warmup_cosine, constant, subsample_batch)
+                    gnb_ghat_flat_from_loss, hessian_aware_optimizer,
+                    hutchinson_estimator_flat, linear_warmup_cosine,
+                    constant, subsample_batch)
 from ..distributed.compression import GradCompressor
 from ..models import ModelConfig, get_model
 from .train_state import TrainState
@@ -82,6 +95,10 @@ class TrainerConfig:
     remat: str = "none"                # none | full | dots
     attn_impl: str = "auto"
     fused_kernel: bool = False         # Pallas backend for the engine
+    fused_loss: bool = False           # Pallas logits-free LM loss + GNB
+    #                                    (kernels/fused_ce.py); default is
+    #                                    the chunked jnp sweep — both keep
+    #                                    the [B*T, V] logits out of HBM
     compress_grads: bool = False       # int8 + error feedback (beyond-paper)
     compress_hess: bool = False        # int8 for the estimator sub-batch
     #                                    gradient too (stateless: no error
@@ -178,9 +195,11 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
     compressor = GradCompressor() if tc.compress_grads else None
     hess_compressor = GradCompressor() if tc.compress_hess else None
 
+    loss_impl = "fused" if tc.fused_loss else None  # None -> module default
+
     def loss_fn(params, batch):
         return model.loss_fn(cfg, params, batch, remat=tc.remat,
-                             attn_impl=tc.attn_impl)
+                             attn_impl=tc.attn_impl, loss_impl=loss_impl)
 
     def init_fn(rng) -> TrainState:
         p_rng, s_rng = jax.random.split(jax.random.PRNGKey(tc.seed)
@@ -210,23 +229,38 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
         compress = (hess_compressor.allreduce_shards_stateless
                     if hess_compressor is not None else lambda s, _: s)
         if tc.estimator == "gnb":
-            def lf(p):
-                return model.logits_fn(cfg, p, sub, remat=tc.remat,
-                                       attn_impl=tc.attn_impl)
-            g_sh, scale = gnb_ghat_flat(lf, params, rng, lay,
-                                        mask=sub.get("mask"))
+            if tc.fused_loss:
+                # logits-free Algorithm 2: the label draw happens inside
+                # the fused loss kernel's vocab sweep and B rides out as
+                # the sweep's valid-position count
+                def slf(p):
+                    return model.sampled_loss_fn(
+                        cfg, p, sub, rng, remat=tc.remat,
+                        attn_impl=tc.attn_impl, loss_impl="fused")
+                g_sh, scale = gnb_ghat_flat_from_loss(slf, params, lay)
+            else:
+                def lf(p):
+                    return model.logits_fn(cfg, p, sub, remat=tc.remat,
+                                           attn_impl=tc.attn_impl)
+                g_sh, scale = gnb_ghat_flat(lf, params, rng, lay,
+                                            mask=sub.get("mask"))
             g_sh = compress(g_sh, crng)
             return tuple(g * g for g in g_sh), scale
         if tc.estimator == "hutchinson":
+            # forward-over-reverse HVP can't cross the fused loss's
+            # custom_vjp (no JVP rule) — the estimator sub-batch always
+            # uses the chunked jnp loss, which supports both modes
             def sf(p):
                 return model.loss_fn(cfg, p, sub, remat=tc.remat,
-                                     attn_impl=tc.attn_impl)[0]
+                                     attn_impl=tc.attn_impl,
+                                     loss_impl="chunked")[0]
             est = hutchinson_estimator_flat(sf, params, rng, lay)
             return compress(est, crng), 1.0
         if tc.estimator == "empirical_fisher":
             def sf(p):
                 return model.loss_fn(cfg, p, sub, remat=tc.remat,
-                                     attn_impl=tc.attn_impl)[0]
+                                     attn_impl=tc.attn_impl,
+                                     loss_impl=loss_impl)[0]
             lead = jax.tree.leaves(sub)[0]
             n = lead.shape[0] * (lead.shape[1] if lead.ndim > 1 else 1)
             g_sh = compress(empirical_fisher_ghat_flat(sf, params, lay),

@@ -269,15 +269,20 @@ def _check_unified_vs_two_program(tc):
     # identical op for op
     np.testing.assert_allclose([h["loss"] for h in hist], l_two,
                                rtol=1e-4, atol=1e-5)
+    # atol 2e-3: the chunked-vocab CE (scan + checkpoint) fuses differently
+    # in the two programs, so the estimator's HVP/grad drifts by ulps more
+    # than the old whole-logits path — enough to flip the clip on a
+    # coordinate sitting exactly at rho, which then walks ~lr*rho per step
+    # (~1e-3 over 16 steps on a handful of coordinates)
     a = jax.flatten_util.ravel_pytree(s_two.params)[0]
     b = jax.flatten_util.ravel_pytree(s_uni.params)[0]
     np.testing.assert_allclose(np.asarray(b), np.asarray(a),
-                               rtol=1e-2, atol=1e-4)
+                               rtol=1e-2, atol=2e-3)
     for x, y in zip(s_two.opt_state.m + s_two.opt_state.h,
                     s_uni.opt_state.m + s_uni.opt_state.h):
         np.testing.assert_allclose(np.asarray(y, np.float32),
                                    np.asarray(x, np.float32),
-                                   rtol=1e-2, atol=1e-4)
+                                   rtol=1e-2, atol=2e-3)
 
 
 # ---------------------------------------------------------------------------
