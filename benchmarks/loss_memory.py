@@ -1,7 +1,8 @@
 """Loss-stage memory + step time: logits-free vs materialized logits.
 
 Measures the isolated LM-loss stage (hidden -> loss, d_hidden, d_W) for
-the three ``models.loss.lm_loss`` implementations across a vocab sweep:
+the ``models.loss.lm_loss`` implementations across a (vocab x tied/untied)
+grid:
 
   * ``temp_bytes``       XLA's compiled peak temp allocation
                          (``compiled.memory_analysis()``)
@@ -11,17 +12,24 @@ the three ``models.loss.lm_loss`` implementations across a vocab sweep:
   * ``ms``               wall time per loss+grad call
   * ``model_hbm_bytes``  the analytic traffic model
                          (kernels.fused_ce.lm_loss_hbm_bytes_*)
+  * ``bn/bv/schedule``   the autotuned block config for fused cells
+                         (kernels.autotune) — so a regression is
+                         attributable to tuning vs kernel changes
 
-plus an end-to-end train-step smoke comparison (chunked — the compiled
-logits-free default — vs the legacy unfused path).  Emits
-``benchmarks/BENCH_loss.json``; the nightly CI job runs ``--smoke`` and
-fails if the fused/chunked paths regress to [B*T, V] residency or the
-logits-free step time regresses past 1.25x unfused.
+plus an end-to-end train-step smoke comparison (unfused / chunked / the
+fused default).  Emits ``benchmarks/BENCH_loss.json``.
+
+This file is the regression gate: the ``ok`` block fails the run (exit 1)
+if any fused cell regresses to [B*T, V] residency, exceeds the logits
+footprint, or loses to the chunked path on wall time; ``--baseline PATH``
+additionally diffs a fresh run against the committed JSON and fails on a
+>15% step-time regression or ANY max-live-buffer growth (the nightly CI
+job).
 
 Note: on CPU the Pallas kernel runs in interpret mode (its grid unrolled
-into the jit), so its wall time is NOT representative — the compiled
-logits-free proxy for step time is the chunked path; the fused row is
-still the one that proves V-independent residency for the kernel program.
+into the jit), so absolute wall times are NOT hardware-representative;
+the fused-vs-chunked comparison is still apples-to-apples (same backend,
+same compiled-program measurement), and the residency audit is exact.
 """
 import argparse
 import json
@@ -35,6 +43,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.autotune import tune_shape
 from repro.kernels.fused_ce import (lm_loss_hbm_bytes_fused,
                                     lm_loss_hbm_bytes_unfused)
 from repro.models import lm_loss, set_lm_loss_impl
@@ -59,19 +68,37 @@ def _max_buffer_numel(hlo_text: str, exclude=()) -> int:
     return best
 
 
-def _mk_cfg(D, V):
+def _mk_cfg(D, V, tied=True):
     return ModelConfig(name=f"loss-bench-v{V}", family="dense", n_layers=1,
                       d_model=D, n_heads=4, n_kv_heads=4, d_ff=4 * D,
-                      vocab_size=V, tie_embeddings=True, dtype="float32")
+                      vocab_size=V, tie_embeddings=tied, dtype="float32")
 
 
-def bench_loss_stage(B, T, D, V, impl, reps=3):
-    cfg = _mk_cfg(D, V)
+def prepare_loss_stage(B, T, D, V, impl, tied=True):
+    """Compile + audit one grid cell; defer timing to the caller.
+
+    Returns ``(row, run)`` where ``row`` has every field except ``ms``
+    and ``run()`` executes one timed step and returns seconds.  The
+    grid driver interleaves ``run`` calls across impls within a cell so
+    slow machine-speed drift (thermal, co-tenant load) hits every impl
+    equally — the fused-vs-chunked gate compares within-cell times."""
+    cfg = _mk_cfg(D, V, tied=tied)
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     hidden = jax.random.normal(ks[0], (B, T, D), jnp.float32)
-    params = {"embed": {"tok": jax.random.normal(
-        ks[1], (cfg.padded_vocab, D), jnp.float32) * 0.2}}
+    params = {"embed": {
+        "tok": jax.random.normal(ks[1], (cfg.padded_vocab, D),
+                                 jnp.float32) * 0.2}}
+    if not tied:
+        params["embed"]["unembed"] = jax.random.normal(
+            ks[1], (D, cfg.padded_vocab), jnp.float32) * 0.2
     labels = jax.random.randint(ks[2], (B, T), 0, V)
+
+    tuned = None
+    if impl == "fused":
+        # measured tuning up front: the jitted loss below then hits the
+        # cache, so the recorded (bn, bv, schedule) is what actually ran
+        tuned = tune_shape(B * T, D, cfg.padded_vocab, dtype="float32",
+                           transpose_w=not tied, softcap=None, norm=None)
 
     def f(h, p, lab):
         return lm_loss(cfg, p, h, lab, impl=impl)[0]
@@ -86,38 +113,54 @@ def bench_loss_stage(B, T, D, V, impl, reps=3):
                                       exclude={cfg.padded_vocab * D})
     out = g(hidden, params, labels)
     jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(g(hidden, params, labels))
-        best = min(best, time.perf_counter() - t0)
     model_bytes = (lm_loss_hbm_bytes_fused(B * T, D, cfg.padded_vocab,
                                            bytes_h=4)
                    if impl != "unfused" else
                    lm_loss_hbm_bytes_unfused(B * T, D, cfg.padded_vocab,
                                              bytes_h=4))
-    return {"B": B, "T": T, "D": D, "V": V, "impl": impl,
-            "temp_bytes": temp, "max_buffer_numel": max_numel,
-            "max_act_buffer_numel": max_act_numel,
-            "has_btv_buffer": bool(max_numel >= B * T * V),
-            "ms": best * 1e3, "model_hbm_bytes": int(model_bytes)}
+    row = {"B": B, "T": T, "D": D, "V": V, "impl": impl, "tied": tied,
+           "temp_bytes": temp, "max_buffer_numel": max_numel,
+           "max_act_buffer_numel": max_act_numel,
+           "has_btv_buffer": bool(max_numel >= B * T * V),
+           "model_hbm_bytes": int(model_bytes)}
+    if tuned is not None:
+        row.update(bn=tuned.bn, bv=tuned.bv, schedule=tuned.schedule,
+                   tuned_source=tuned.source)
+
+    def run():
+        t0 = time.perf_counter()
+        jax.block_until_ready(g(hidden, params, labels))
+        return time.perf_counter() - t0
+
+    return row, run
+
+
+def bench_loss_stage(B, T, D, V, impl, tied=True, reps=7):
+    row, run = prepare_loss_stage(B, T, D, V, impl, tied=tied)
+    row["ms"] = min(run() for _ in range(reps)) * 1e3
+    return row
 
 
 def bench_train_smoke(steps=8):
-    """Full train-step wall time on the smoke config per loss impl."""
+    """Full train-step wall time on the smoke config per loss impl.
+
+    ``fused`` runs the production default (``TrainerConfig.fused_loss``,
+    in-sweep GNB refresh); the other two pin ``fused_loss=False`` and
+    select the module-level impl the hot path should compile."""
     from repro.configs.gpt2 import GPT2_TINY
     from repro.data import DataConfig, make_source
     from repro.train import TrainerConfig, train_loop
 
     out = {}
-    for impl in ("unfused", "chunked"):
-        set_lm_loss_impl(impl)
+    for impl in ("unfused", "chunked", "fused"):
+        set_lm_loss_impl(impl if impl != "fused" else "chunked")
         try:
             src = make_source(DataConfig(seq_len=64, global_batch=8,
                                          vocab_size=512, seed=0))
             tc = TrainerConfig(optimizer="sophia_g", peak_lr=3e-4,
                                total_steps=steps, hess_interval=4,
-                               hess_subbatch=4, seed=0)
+                               hess_subbatch=4, seed=0,
+                               fused_loss=(impl == "fused"))
             # per-step timestamps via the loop callback; steps 0 (hot-path
             # compile) and 1 (first refresh executes the cond's estimator
             # branch) are dropped so the gate measures steady-state step
@@ -132,7 +175,39 @@ def bench_train_smoke(steps=8):
         finally:
             set_lm_loss_impl("chunked")
     out["ratio_chunked_vs_unfused"] = out["chunked_ms"] / out["unfused_ms"]
+    out["ratio_fused_vs_chunked"] = out["fused_ms"] / out["chunked_ms"]
     return out
+
+
+def diff_vs_baseline(report, baseline_path, *, ms_tol=1.15):
+    """Nightly regression diff: fresh ``report`` vs the committed JSON.
+
+    Fails (returns a non-empty list of reasons) on a >15% step-time
+    regression in any matching loss-stage cell or the train smoke, or on
+    ANY growth of a cell's max live activation buffer."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    bcells = {(r["V"], r.get("tied", True), r["impl"]): r
+              for r in base["loss_stage"]}
+    fails = []
+    for r in report["loss_stage"]:
+        b = bcells.get((r["V"], r.get("tied", True), r["impl"]))
+        if b is None:
+            continue  # new cell: no baseline to regress against
+        cell = f"V={r['V']} tied={r.get('tied', True)} {r['impl']}"
+        if r["ms"] > b["ms"] * ms_tol:
+            fails.append(f"{cell}: ms {r['ms']:.2f} > {ms_tol}x baseline "
+                         f"{b['ms']:.2f}")
+        if r["max_act_buffer_numel"] > b["max_act_buffer_numel"]:
+            fails.append(f"{cell}: max live activation buffer grew "
+                         f"{b['max_act_buffer_numel']:,} -> "
+                         f"{r['max_act_buffer_numel']:,} elements")
+    bt, nt = base.get("train_smoke", {}), report["train_smoke"]
+    for k in ("unfused_ms", "chunked_ms", "fused_ms"):
+        if k in bt and nt[k] > bt[k] * ms_tol:
+            fails.append(f"train smoke {k}: {nt[k]:.1f} > {ms_tol}x "
+                         f"baseline {bt[k]:.1f}")
+    return fails
 
 
 def main():
@@ -140,48 +215,78 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="small sweep for CI (seconds, not minutes)")
     ap.add_argument("--out", default="benchmarks/BENCH_loss.json")
+    ap.add_argument("--baseline", default=None,
+                    help="diff against a committed BENCH_loss.json and "
+                         "fail on >15%% step time or any max-live-buffer "
+                         "regression (nightly CI)")
     args = ap.parse_args()
 
-    # vocab sizes sit past the chunk-size plateau (fused block_v=1024,
-    # chunked chunk=2048): above it the logits-free paths' biggest buffer
-    # is one [rows, chunk] tile, flat in V, while unfused grows as B*T*V
+    # vocab sizes sit past the chunk-size plateau (chunked chunk=2048):
+    # above it the chunked path's biggest buffer is one [rows, chunk]
+    # tile, flat in V, while unfused grows as B*T*V; the fused path's
+    # tile is the autotuner's pick, bounded by the residency cap
     # (D chosen so V*D never collides with a rows*chunk tile size — the
     # weight-buffer exclusion in the activation audit stays unambiguous)
     if args.smoke:
         B, T, D = 4, 64, 96
-        vocabs = [4096, 8192]
+        vocabs = [4096, 8192, 32768]
     else:
         B, T, D = 8, 128, 160
-        vocabs = [8192, 16384, 32768]
+        vocabs = [4096, 8192, 32768]
 
     rows = []
+    reps = 7
     for V in vocabs:
-        for impl in ("unfused", "chunked", "fused"):
-            r = bench_loss_stage(B, T, D, V, impl)
-            rows.append(r)
-            print(f"V={V:6d} {impl:8s} temp={r['temp_bytes']:>12,}B "
-                  f"max_buf={r['max_buffer_numel']:>12,}el "
-                  f"max_act={r['max_act_buffer_numel']:>12,}el "
-                  f"btv={str(r['has_btv_buffer']):5s} {r['ms']:8.2f}ms")
+        for tied in (True, False):
+            # compile all three impls first, then round-robin the timed
+            # reps across them: machine-speed drift between reps lands
+            # on every impl, so the within-cell fused-vs-chunked gate
+            # compares like with like (best-of-reps per impl)
+            cells = [(impl,
+                      *prepare_loss_stage(B, T, D, V, impl, tied=tied))
+                     for impl in ("unfused", "chunked", "fused")]
+            best = {impl: float("inf") for impl, _, _ in cells}
+            for _ in range(reps):
+                for impl, _, run in cells:
+                    best[impl] = min(best[impl], run())
+            for impl, r, _ in cells:
+                r["ms"] = best[impl] * 1e3
+                rows.append(r)
+                blk = (f" bn={r['bn']}/bv={r['bv']}/{r['schedule']}"
+                       if impl == "fused" else "")
+                print(f"V={V:6d} {'tied  ' if tied else 'untied'} "
+                      f"{impl:8s} temp={r['temp_bytes']:>12,}B "
+                      f"max_act={r['max_act_buffer_numel']:>11,}el "
+                      f"btv={str(r['has_btv_buffer']):5s} "
+                      f"{r['ms']:8.2f}ms{blk}", flush=True)
 
     train = bench_train_smoke()
     print(f"train smoke: unfused {train['unfused_ms']:.1f}ms/step, "
-          f"chunked (logits-free) {train['chunked_ms']:.1f}ms/step "
-          f"(ratio {train['ratio_chunked_vs_unfused']:.2f})")
+          f"chunked {train['chunked_ms']:.1f}ms/step, "
+          f"fused (default) {train['fused_ms']:.1f}ms/step")
 
     by = lambda impl: [r for r in rows if r["impl"] == impl]  # noqa: E731
+    chunked_ms = {(r["V"], r["tied"]): r["ms"] for r in by("chunked")}
     ok = {
         # the acceptance criterion: no [B*T, V] residency at any vocab size
         "fused_logits_free": not any(r["has_btv_buffer"] for r in by("fused")),
         "chunked_logits_free": not any(r["has_btv_buffer"]
                                        for r in by("chunked")),
-        # ... and the biggest *activation* buffer (everything except the
-        # V*D weight / d_W, which is a gradient output) is flat in V
-        "fused_v_independent": len({r["max_act_buffer_numel"]
-                                    for r in by("fused")}) == 1,
+        # ... and the biggest *activation* buffer stays strictly below the
+        # logits footprint in every fused cell.  (The tuned tile differs
+        # per cell, so the old flat-in-V set test is replaced by the
+        # per-cell bound the autotuner's residency cap guarantees.)
+        "fused_tile_bounded": all(
+            r["max_act_buffer_numel"] < r["B"] * r["T"] * r["V"]
+            for r in by("fused")),
         # sanity: the unfused oracle really does materialize it
         "unfused_materializes": all(r["has_btv_buffer"]
                                     for r in by("unfused")),
+        # the tentpole's exit criterion: tuned fused wins wall-clock in
+        # every grid cell
+        "fused_beats_chunked": all(
+            r["ms"] <= chunked_ms[(r["V"], r["tied"])]
+            for r in by("fused")),
         # no step-time regression for the compiled logits-free path
         "no_step_time_regression":
             train["ratio_chunked_vs_unfused"] <= 1.25,
@@ -191,6 +296,12 @@ def main():
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print("ok:", ok, "->", args.out)
+    if args.baseline:
+        fails = diff_vs_baseline(report, args.baseline)
+        for msg in fails:
+            print("REGRESSION:", msg)
+        if fails:
+            raise SystemExit(1)
     if not all(ok.values()):
         raise SystemExit(1)
 

@@ -7,6 +7,9 @@ computations:
   ``u * (H u)`` via a Hessian-vector product.  Unbiased for diag(H).
   We implement the HVP as forward-over-reverse (``jvp`` of ``grad``), which is
   the memory-cheap direction and compiles to one extra fwd+bwd pass on TPU.
+  With ``fused_loss`` the trainer routes the HVP through the fused CE
+  kernel's ``custom_jvp`` twin (``models.loss.lm_loss`` impl "fused_jvp"),
+  so there is no silent fallback to the chunked path at the loss boundary.
 
 * :func:`gnb_estimator` — Algorithm 2 (Gauss-Newton-Bartlett).  Sample labels
   ``yhat_b ~ softmax(f(theta, x_b))`` from the *model's own* logits, take the

@@ -1,0 +1,356 @@
+"""Shape-keyed block autotuner for the fused CE kernels.
+
+Picking (block_rows ``bn``, block_v ``bv``, backward schedule) for
+``kernels/fused_ce.py`` is a classic tiling problem: the kernels are
+correct for ANY divisor pair, but wall-clock swings several-fold with the
+tile shape (weight-tile re-reads scale with the row-grid size, the
+combined backward schedule is only legal on single-axis grids, and in
+interpret mode per-grid-cell dispatch overhead dwarfs the arithmetic).
+This module resolves it in three stages:
+
+1. **candidates** — every (bn, bv) with bn | N (multiple of 8), bv | Vp
+   (multiple of 128), filtered by a VMEM working-set budget (real TPU) or
+   a tile-size sanity cap (interpret) and by the logits-residency cap
+   ``bn * bv <= max(N * Vp / 2, 8 * 128)`` so the tuner can never pick the
+   degenerate whole-[N, V]-tile config that the memory audit exists to
+   forbid.  Each tiling carries its legal schedules ("fused" iff one grid
+   axis is 1).
+2. **predict** — the analytic cost model (``predict_seconds``): per-pass
+   ``max(flops/PEAK_FLOPS, bytes/HBM_BW)`` on the roofline constants from
+   ``launch/roofline.py`` for a real backend; for interpret mode a
+   CPU model ``flops/CPU_FLOPS + cells * CELL_OVERHEAD_S`` (the
+   interpreter unrolls the grid, so cell count — not bandwidth — is the
+   first-order term).  Candidates are ranked by predicted time.
+3. **measure (optional refinement)** — ``measure=True`` times
+   ``value_and_grad`` of the real kernel at the top ``MEASURE_TOP_K``
+   predicted candidates and keeps the fastest.  Only *measured* winners are
+   persisted to the on-disk cache; roofline-only picks stay in-memory so
+   CI stays hermetic and deterministic.
+
+The cache is keyed on ``(N, D, Vp, dtype, transpose_w, softcap?, norm,
+backend)`` and lives at ``$REPRO_FUSED_CE_CACHE`` (default
+``~/.cache/repro/fused_ce_autotune.json``), written atomically.  Lookup
+(``get_tuned``) is pure host-side Python on static shapes — safe to call
+at trace time from inside ``jit``; measurement only ever runs eagerly
+(benchmarks, ``launch/train.py --retune``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+CACHE_VERSION = 1
+MEASURE_TOP_K = 4
+MEASURE_REPS = 3
+
+# interpret-mode cost model, calibrated on the loss_memory bench host:
+# a grid cell of the unrolled interpreter costs ~2.5 ms of dispatch +
+# discharge overhead regardless of tile size, and the jnp arithmetic
+# inside sustains ~50 GFLOP/s
+CPU_FLOPS = 5.0e10
+CELL_OVERHEAD_S = 2.5e-3
+
+# VMEM working-set budget for a real TPU backend (per-core VMEM is
+# ~16 MiB; leave headroom for pipelining double-buffers)
+VMEM_BUDGET_BYTES = 12 << 20
+# interpret mode has no VMEM, but a tile of jnp intermediates still costs
+# host RAM — cap the fp32 logits tile at 2^24 elements (64 MiB)
+INTERPRET_TILE_ELEMS = 1 << 24
+
+_LOCK = threading.Lock()
+_MEM: dict = {}          # key -> TunedCE (both measured and roofline picks)
+_DISK_LOADED = False
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedCE:
+    """One tuning decision: the block sizes and backward schedule for a
+    fused-CE shape, plus provenance ("seed" | "roofline" | "measured")."""
+    bn: int
+    bv: int
+    schedule: str                 # "split" | "fused"
+    source: str
+    predicted_ms: float = 0.0
+    measured_ms: float | None = None
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_FUSED_CE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "fused_ce_autotune.json"))
+
+
+def cache_key(N, D, Vp, *, dtype, transpose_w, softcap, norm,
+              backend) -> str:
+    dt = np.dtype(dtype).name if not isinstance(dtype, str) else dtype
+    return (f"N{N}-D{D}-V{Vp}-{dt}-"
+            f"{'untied' if transpose_w else 'tied'}-"
+            f"cap{softcap if softcap else 0}-norm{norm or 'none'}-"
+            f"{backend}")
+
+
+def _dtype_bytes(dtype) -> int:
+    return np.dtype(dtype).itemsize
+
+
+def residency_cap(N: int, Vp: int) -> int:
+    """Max legal logits-tile elements: half the full [N, Vp] buffer (so the
+    no-materialization audit keeps meaning something), floored at one
+    minimal (8, 128) tile for tiny shapes."""
+    return max((N * Vp) // 2, 8 * 128)
+
+
+def _divisors(n: int, quantum: int, cap: int) -> list:
+    """Multiples of ``quantum`` dividing n, geometrically thinned (each
+    kept divisor at least ~1.4x the previous) so huge shapes don't explode
+    the search, always keeping quantum and n itself (if <= cap)."""
+    ds = [d for d in range(quantum, min(n, cap) + 1, quantum) if n % d == 0]
+    out = []
+    for d in ds:
+        if not out or d >= out[-1] * 1.4 or d == ds[-1]:
+            out.append(d)
+    return out or [quantum]
+
+
+def candidate_blocks(N: int, D: int, Vp: int, *, bytes_h: int,
+                     interpret: bool) -> list:
+    """All legal (bn, bv, schedule) triples for the shape, budget- and
+    residency-filtered.  ``schedule="fused"`` appears only for tilings
+    where one grid axis is 1 (the combined backward kernel's legality
+    condition — no non-consecutive output-block revisits)."""
+    cap = residency_cap(N, Vp)
+    cands = []
+    for bn in _divisors(N, 8, max(N, 8)):
+        for bv in _divisors(Vp, 128, Vp):
+            if bn * bv > cap:
+                continue
+            if interpret:
+                if bn * bv > INTERPRET_TILE_ELEMS:
+                    continue
+            else:
+                # working set: h tile + w tile + fp32 logits tile + the
+                # larger backward scratch, double-buffered inputs
+                ws = 2 * (bn * D * bytes_h + bv * D * 4) \
+                    + bn * bv * 4 + max(bn, bv) * D * 4
+                if ws > VMEM_BUDGET_BYTES:
+                    continue
+            n_r, n_v = N // bn, Vp // bv
+            cands.append((bn, bv, "split"))
+            if n_r == 1 or n_v == 1:
+                cands.append((bn, bv, "fused"))
+    return cands
+
+
+def predict_seconds(N: int, D: int, Vp: int, bn: int, bv: int,
+                    schedule: str, *, bytes_h: int, bytes_w: int,
+                    interpret: bool) -> float:
+    """Analytic cost of one fwd+bwd of the fused NLL at this tiling.
+
+    Real backend: per-pass ``max(compute, memory)`` against the
+    ``launch/roofline.py`` constants.  The memory terms are exact DMA
+    counts from the BlockSpecs: the forward re-reads the full W once per
+    row block (``n_r * w_bytes``), the split backward adds a second full
+    logits recompute plus an h re-stream per vocab chunk, and the fused
+    schedule reads each operand exactly once.  Interpret: grid cells are
+    unrolled by the interpreter, so cost = flops/CPU_FLOPS + cells *
+    CELL_OVERHEAD_S (memory ignored — everything is host RAM)."""
+    from ..launch.roofline import HBM_BW, PEAK_FLOPS
+
+    n_r, n_v = N // bn, Vp // bv
+    mm = 2.0 * N * D * Vp                    # one full-projection matmul
+    h_b = N * D * bytes_h
+    w_b = Vp * D * bytes_w
+
+    if schedule == "fused":
+        passes = [
+            (mm, h_b + n_r * w_b),                    # forward
+            (3.0 * mm, h_b + w_b + h_b + w_b),        # combined backward
+        ]
+        cells = n_r * n_v * 2
+    else:
+        passes = [
+            (mm, h_b + n_r * w_b),                    # forward
+            (2.0 * mm, h_b + n_r * w_b + h_b),        # d_hidden sweep
+            (2.0 * mm, n_v * h_b + w_b + w_b),        # d_W sweep
+        ]
+        cells = n_r * n_v * 3
+
+    if interpret:
+        flops = sum(f for f, _ in passes)
+        return flops / CPU_FLOPS + cells * CELL_OVERHEAD_S
+    return sum(max(f / PEAK_FLOPS, b / HBM_BW) for f, b in passes)
+
+
+# ---------------------------------------------------------------------------
+# persistent cache
+
+
+def _load_disk() -> None:
+    global _DISK_LOADED
+    if _DISK_LOADED:
+        return
+    _DISK_LOADED = True
+    try:
+        with open(cache_path()) as f:
+            blob = json.load(f)
+    except (OSError, ValueError):
+        return
+    if blob.get("version") != CACHE_VERSION:
+        return
+    for k, e in blob.get("entries", {}).items():
+        _MEM.setdefault(k, TunedCE(**e))
+
+
+def _save_disk() -> None:
+    """Persist the *measured* entries atomically (tmp + rename).  Roofline
+    picks are deliberately not written: they are cheap to recompute and
+    letting them pin the cache would freeze a model-based guess as if it
+    were ground truth."""
+    path = cache_path()
+    entries = {k: dataclasses.asdict(t) for k, t in _MEM.items()
+               if t.source == "measured"}
+    blob = {"version": CACHE_VERSION, "entries": entries}
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + f".tmp{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass                     # read-only FS: run with the in-memory pick
+
+
+def clear_memory_cache() -> None:
+    """Forget in-process picks (tests); the disk cache is untouched."""
+    global _DISK_LOADED
+    with _LOCK:
+        _MEM.clear()
+        _DISK_LOADED = False
+
+
+def drop_entry(key: str) -> None:
+    with _LOCK:
+        _load_disk()
+        if _MEM.pop(key, None) is not None:
+            _save_disk()
+
+
+# ---------------------------------------------------------------------------
+# measurement
+
+
+def _measure_ms(N, D, Vp, bn, bv, schedule, *, dtype, transpose_w, softcap,
+                norm, interpret) -> float:
+    """Median wall-clock (ms) of one jitted value_and_grad of the fused
+    NLL at this tiling, on synthetic operands of the keyed shape."""
+    import jax
+    import jax.numpy as jnp
+
+    from . import fused_ce
+
+    k = jax.random.PRNGKey(0)
+    kh, kw, kl = jax.random.split(k, 3)
+    h = (jax.random.normal(kh, (N, D), jnp.float32) * 0.02).astype(dtype)
+    wshape = (D, Vp) if transpose_w else (Vp, D)
+    w = (jax.random.normal(kw, wshape, jnp.float32) * 0.02)
+    labels = jax.random.randint(kl, (N,), 0, Vp)
+    kwargs = dict(vocab_size=Vp, transpose_w=transpose_w, softcap=softcap,
+                  block_n=bn, block_v=bv, schedule=schedule,
+                  interpret=interpret)
+    if norm:
+        kwargs.update(norm_kind=norm, norm_scale=jnp.zeros((D,)),
+                      norm_bias=jnp.zeros((D,)))
+
+    def f(h, w):
+        return fused_ce.fused_lm_loss(h, w, labels, **kwargs)[0]
+
+    g = jax.jit(jax.value_and_grad(f, argnums=(0, 1)))
+    jax.block_until_ready(g(h, w))            # compile
+    ts = []
+    for _ in range(MEASURE_REPS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(g(h, w))
+        ts.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(ts))
+
+
+# ---------------------------------------------------------------------------
+# entry points
+
+
+def get_tuned(N: int, D: int, Vp: int, *, dtype, transpose_w: bool,
+              softcap, norm, interpret: bool, measure: bool = False,
+              refresh: bool = False) -> TunedCE:
+    """The (bn, bv, schedule) to use for this fused-CE shape.
+
+    Deterministic host-side Python (trace-safe).  Order of precedence:
+    in-memory hit -> disk hit (measured entries only) -> roofline-ranked
+    search, optionally refined by measurement (``measure=True``, eager
+    contexts only).  ``refresh=True`` ignores caches and re-tunes."""
+    backend = "interpret" if interpret else "tpu"
+    key = cache_key(N, D, Vp, dtype=dtype, transpose_w=transpose_w,
+                    softcap=softcap, norm=norm, backend=backend)
+    with _LOCK:
+        _load_disk()
+        if not refresh and key in _MEM:
+            hit = _MEM[key]
+            if hit.source == "measured" or not measure:
+                return hit
+
+    bytes_h = _dtype_bytes(dtype)
+    cands = candidate_blocks(N, D, Vp, bytes_h=bytes_h, interpret=interpret)
+    if not cands:
+        t = TunedCE(8, 128, "split", "seed")
+        with _LOCK:
+            _MEM[key] = t
+        return t
+    scored = sorted(
+        cands,
+        key=lambda c: (predict_seconds(N, D, Vp, c[0], c[1], c[2],
+                                       bytes_h=bytes_h, bytes_w=4,
+                                       interpret=interpret), c))
+    best = scored[0]
+    pred = predict_seconds(N, D, Vp, *best, bytes_h=bytes_h, bytes_w=4,
+                           interpret=interpret)
+
+    if not measure:
+        t = TunedCE(best[0], best[1], best[2], "roofline",
+                    predicted_ms=pred * 1e3)
+        with _LOCK:
+            _MEM[key] = t
+        return t
+
+    timed = []
+    for c in scored[:MEASURE_TOP_K]:
+        ms = _measure_ms(N, D, Vp, c[0], c[1], c[2], dtype=dtype,
+                         transpose_w=transpose_w, softcap=softcap,
+                         norm=norm, interpret=interpret)
+        timed.append((ms, c))
+    ms, win = min(timed, key=lambda t: (t[0], t[1]))
+    t = TunedCE(win[0], win[1], win[2], "measured",
+                predicted_ms=predict_seconds(
+                    N, D, Vp, *win, bytes_h=bytes_h, bytes_w=4,
+                    interpret=interpret) * 1e3,
+                measured_ms=ms)
+    with _LOCK:
+        _MEM[key] = t
+        _save_disk()
+    return t
+
+
+def tune_shape(N: int, D: int, Vp: int, *, dtype="float32",
+               transpose_w=False, softcap=None, norm=None,
+               interpret=None, refresh: bool = False) -> TunedCE:
+    """Eager measured tuning for one shape (benchmarks, ``--retune``)."""
+    if interpret is None:
+        from .fused_ce import _interpret_default
+        interpret = _interpret_default()
+    return get_tuned(N, D, Vp, dtype=dtype, transpose_w=transpose_w,
+                     softcap=softcap, norm=norm, interpret=interpret,
+                     measure=True, refresh=refresh)

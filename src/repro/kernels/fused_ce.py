@@ -11,17 +11,42 @@ online-softmax cross-entropy:
   forward   one (rows, vocab-chunks) grid sweep; per row tile the kernel
             keeps running (max, sum-exp, label-logit) in VMEM scratch and
             emits only ``lse`` and ``label_logit`` vectors — ``(N,)`` each.
-  backward  ``custom_vjp``: two more vocab sweeps recompute each logits
-            tile and emit ``d_hidden`` (chunks inner, accumulated in VMEM)
-            and ``d_W`` (rows inner, accumulated in the resident output
-            block) directly from ``softmax - onehot``.  The ``[N, V]``
-            logits (and the fp32 log-probs copy) never touch HBM.
+            The final-*norm* producer can be fused in: the kernel reads
+            PRE-norm hidden tiles and applies rms/layer norm in VMEM, so
+            the normed (N, D) activation never round-trips HBM.
+  backward  ``custom_vjp``: vocab sweeps recompute each logits tile and
+            emit ``d_hidden`` and ``d_W`` directly from
+            ``softmax - onehot``.  Two schedules:
+              * ``split``  — two sweeps (d_hidden chunks-inner with a VMEM
+                accumulator; d_W rows-inner with the chunk block resident);
+              * ``fused``  — ONE combined sweep computing both, legal
+                whenever one grid axis is 1 (the autotuner only emits such
+                tilings for it): every output block is then either written
+                once or accumulated over *consecutive* grid steps, so no
+                block is ever revisited non-consecutively (which Pallas TPU
+                pipelining does not guarantee to re-fetch).  Saves one full
+                logits recompute (backward 6 -> 4 matmul-sweeps).
+            The ``[N, V]`` logits (and the fp32 log-probs copy) never touch
+            HBM either way.
   sampling  the same forward sweep optionally draws ``yhat ~
             softmax(logits)`` by online chunked Gumbel-argmax (counter-based
             hash noise, pure function of ``(seed, row, col)``) and records
             the chosen column's raw logit, so the Algorithm-2 GNB refresh
             goes logits-free too: ``nll = lse - logit[yhat]`` with the
             identical backward.
+  hvp       ``fused_lm_loss_jvp`` is a ``custom_jvp`` twin of the labeled
+            NLL: the primal runs the same Pallas forward, the tangent is a
+            checkpointed chunked jnp sweep (linear in the input tangents,
+            so JAX's transpose gives a chunked backward for free).  The
+            Hutchinson estimator's forward-over-reverse HVP composes with
+            it — it cannot cross the ``custom_vjp`` path, which previously
+            forced a silent fall back to the chunked loss.
+
+Block sizes: ``block_n``/``block_v`` default to ``None``, which resolves
+through the shape-keyed autotuner (``kernels/autotune.py`` — roofline-model
+search with optional measured refinement and a persistent cache; the old
+hardcoded ``DEFAULT_BN``/``DEFAULT_BV`` survive only as cache-miss seeds).
+Explicit block sizes bypass the tuner (kernel unit tests).
 
 Compute convention (matches ``models.layers.unembed``): W is cast to the
 hidden dtype, the projection accumulates in fp32
@@ -30,7 +55,9 @@ hidden dtype, the projection accumulates in fp32
 nothing to the CE denominator, are never sampled, and receive exactly zero
 gradient.  Tied embeddings pass W as ``(Vp, D)`` (``transpose_w=False``);
 untied as ``(D, Vp)`` (``transpose_w=True``) — the BlockSpecs stream the
-right tile either way, no host-side transpose.
+right tile either way, no host-side transpose.  The fused norm replicates
+``models.layers.rms_norm`` / ``layer_norm`` bit-for-bit (fp32 statistics,
+cast back to the hidden dtype before the projection).
 
 Validated under ``interpret=True`` against the kernels/ref.py closed-form
 oracles (``lm_loss_grads_ref`` / ``lm_loss_sampled_ref``) to <=3e-6 in
@@ -39,6 +66,7 @@ natively.
 """
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
@@ -47,12 +75,26 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-DEFAULT_BN = 256    # rows (B*T positions) per tile
-DEFAULT_BV = 1024   # vocab columns per chunk (multiple of 128)
+DEFAULT_BN = 256    # rows (B*T positions) per tile (autotuner seed)
+DEFAULT_BV = 1024   # vocab columns per chunk (multiple of 128; seed)
 NEG_INF = -1e30
 
 _f32 = jnp.float32
 _u32 = jnp.uint32
+
+# Trace-time kernel invocation counters (per pallas_call wrapper).  Tests
+# use these to assert a path really went through the fused kernels — e.g.
+# that the Hutchinson HVP's primal ran the Pallas forward instead of
+# silently falling back to the chunked jnp loss.
+KERNEL_CALLS = collections.Counter()
+
+
+def kernel_calls() -> dict:
+    return dict(KERNEL_CALLS)
+
+
+def reset_kernel_calls() -> None:
+    KERNEL_CALLS.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +204,30 @@ def rowscale(n_rows: int, mask):
 # shared tile math
 
 
+def apply_norm(x, normp, norm, eps):
+    """The fused final-norm producer, bit-for-bit the models.layers
+    convention: fp32 statistics over the last axis, cast back to ``x``'s
+    dtype.  ``normp`` is the packed (2, D) fp32 [scale; bias] pair; rms
+    ignores the bias row and uses the (1 + scale) parameterization, ln uses
+    ``scale * xhat + bias``.  Plain jnp so the SAME function runs inside
+    the Pallas kernels (on VMEM tiles) and as the differentiable host-side
+    twin whose ``jax.vjp`` produces the d_x / d_scale / d_bias cotangents
+    in the custom_vjp backward."""
+    if norm is None:
+        return x
+    x32 = x.astype(_f32)
+    scale = normp[0]
+    if norm == "ln":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        out = (x32 - mu) * jax.lax.rsqrt(var + eps) * scale + normp[1]
+    else:
+        assert norm == "rms", norm
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale)
+    return out.astype(x.dtype)
+
+
 def _tile_logits(h, w, transpose_w, softcap):
     """One logits tile in the unembed convention: W cast to the hidden
     dtype, fp32 accumulation, softcap in fp32.  Returns (z, dcap) with
@@ -181,13 +247,41 @@ def _tile_cols(j, bn, bv):
     return j * bv + jax.lax.broadcasted_iota(jnp.int32, (bn, bv), 1)
 
 
+def _label_logit_tile(s, lab, j, bn, bv, interpret):
+    """Per-row logit at the label column, 0 for rows whose label falls
+    outside this chunk.  Interpret mode uses a (bn,)-sized gather — on the
+    CPU interpreter the (bn, bv) iota/compare/where dance costs real time
+    at large tiles; TPU keeps the vectorized compare (lane-crossing
+    gathers don't lower well in Mosaic)."""
+    if interpret:
+        idx = lab - j * bv
+        ok = (idx >= 0) & (idx < bv)
+        got = jnp.take_along_axis(s, jnp.clip(idx, 0, bv - 1)[:, None],
+                                  axis=1)[:, 0]
+        return jnp.where(ok, got, 0.0)
+    hit = _tile_cols(j, bn, bv) == lab[:, None]
+    return jnp.where(hit, s, 0.0).sum(-1)
+
+
 # ---------------------------------------------------------------------------
 # forward kernels
 
 
-def _ce_fwd_kernel(lab_ref, h_ref, w_ref, lse_out, ll_out,
+def _masked_tile(z, j, bn, bv, vocab, vp):
+    """(s, valid): logits with padded-vocab columns forced to NEG_INF.
+    Static no-op when the vocab needs no padding (vocab == vp) — the mask
+    materializes two (bn, bv) temporaries, real money in interpret mode."""
+    if vocab == vp:
+        return z, None
+    cols = _tile_cols(j, bn, bv)
+    valid = cols < vocab
+    return jnp.where(valid, z, NEG_INF), valid
+
+
+def _ce_fwd_kernel(np_ref, lab_ref, h_ref, w_ref, lse_out, ll_out,
                    m_scr, l_scr, ll_scr, *,
-                   bn, bv, vocab, n_v, transpose_w, softcap):
+                   bn, bv, vocab, vp, n_v, transpose_w, softcap, norm, eps,
+                   interpret):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -196,18 +290,17 @@ def _ce_fwd_kernel(lab_ref, h_ref, w_ref, lse_out, ll_out,
         l_scr[...] = jnp.zeros_like(l_scr[...])
         ll_scr[...] = jnp.zeros_like(ll_scr[...])
 
-    z, _ = _tile_logits(h_ref[...], w_ref[...], transpose_w, softcap)
-    cols = _tile_cols(j, bn, bv)
-    valid = cols < vocab
-    s = jnp.where(valid, z, NEG_INF)
+    hn = apply_norm(h_ref[...], np_ref[...], norm, eps)
+    z, _ = _tile_logits(hn, w_ref[...], transpose_w, softcap)
+    s, valid = _masked_tile(z, j, bn, bv, vocab, vp)
 
     m_new, l_new = online_lse_step(m_scr[...][:, 0], l_scr[...][:, 0], s,
                                    valid)
     m_scr[...] = m_new[:, None]
     l_scr[...] = l_new[:, None]
 
-    hit = cols == lab_ref[...][:, None]
-    ll_scr[...] += jnp.where(hit, s, 0.0).sum(-1, keepdims=True)
+    ll_scr[...] += _label_logit_tile(s, lab_ref[...], j, bn, bv,
+                                     interpret)[:, None]
 
     @pl.when(j == n_v - 1)
     def _flush():
@@ -216,9 +309,10 @@ def _ce_fwd_kernel(lab_ref, h_ref, w_ref, lse_out, ll_out,
         ll_out[...] = ll_scr[...][:, 0]
 
 
-def _ce_fwd_sample_kernel(seed_ref, h_ref, w_ref, lse_out, ll_out, yhat_out,
-                          m_scr, l_scr, zm_scr, zi_scr, zl_scr, *,
-                          bn, bv, vocab, n_v, transpose_w, softcap):
+def _ce_fwd_sample_kernel(np_ref, seed_ref, h_ref, w_ref, lse_out, ll_out,
+                          yhat_out, m_scr, l_scr, zm_scr, zi_scr, zl_scr, *,
+                          bn, bv, vocab, vp, n_v, transpose_w, softcap, norm,
+                          eps):
     i = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -230,10 +324,11 @@ def _ce_fwd_sample_kernel(seed_ref, h_ref, w_ref, lse_out, ll_out, yhat_out,
         zi_scr[...] = jnp.zeros_like(zi_scr[...])
         zl_scr[...] = jnp.zeros_like(zl_scr[...])
 
-    z, _ = _tile_logits(h_ref[...], w_ref[...], transpose_w, softcap)
+    hn = apply_norm(h_ref[...], np_ref[...], norm, eps)
+    z, _ = _tile_logits(hn, w_ref[...], transpose_w, softcap)
     cols = _tile_cols(j, bn, bv)
-    valid = cols < vocab
-    s = jnp.where(valid, z, NEG_INF)
+    valid = None if vocab == vp else cols < vocab
+    s = z if valid is None else jnp.where(valid, z, NEG_INF)
 
     m_new, l_new = online_lse_step(m_scr[...][:, 0], l_scr[...][:, 0], s,
                                    valid)
@@ -245,7 +340,7 @@ def _ce_fwd_sample_kernel(seed_ref, h_ref, w_ref, lse_out, ll_out, yhat_out,
     # needs no second pass
     rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, bv), 0)
     g = hash_gumbel(seed_ref[...], rows, cols)
-    zp = jnp.where(valid, s + g, NEG_INF)
+    zp = s + g if valid is None else jnp.where(valid, s + g, NEG_INF)
     zm, zi, zl = online_argmax_step(
         (zm_scr[...][:, 0], zi_scr[...][:, 0], zl_scr[...][:, 0]),
         s, zp, j * bv)
@@ -265,34 +360,45 @@ def _ce_fwd_sample_kernel(seed_ref, h_ref, w_ref, lse_out, ll_out, yhat_out,
 # backward kernels (shared by the labeled and sampled paths)
 
 
-def _dlogits_tile(h, w, lab, rs, lse, j, *, bn, bv, vocab, transpose_w,
-                  softcap):
-    """Recompute one logits tile and return d_logits_raw (bn, bv) fp32:
-    ``(softmax - onehot(lab)) * rowscale``, softcap chain rule applied,
-    exactly zero on padded columns (p = 0 and onehot = 0 there)."""
-    z, dcap = _tile_logits(h, w, transpose_w, softcap)
-    cols = _tile_cols(j, bn, bv)
-    valid = cols < vocab
-    s = jnp.where(valid, z, NEG_INF)
+def _dlogits_tile(hn, w, lab, rs, lse, j, *, bn, bv, vocab, vp, transpose_w,
+                  softcap, interpret):
+    """Recompute one logits tile (from the already-normed hidden tile) and
+    return d_logits_raw (bn, bv) fp32: ``(softmax - onehot(lab)) *
+    rowscale``, softcap chain rule applied, exactly zero on padded columns
+    (p = 0 and onehot = 0 there).  Interpret mode subtracts the onehot
+    term with a (bn,)-sized scatter-add instead of materializing the
+    (bn, bv) compare (cheap on CPU, not Mosaic-lowerable on TPU)."""
+    z, dcap = _tile_logits(hn, w, transpose_w, softcap)
+    s, _ = _masked_tile(z, j, bn, bv, vocab, vp)
     p = jnp.exp(s - lse[:, None])
-    onehot = (cols == lab[:, None]).astype(_f32)
-    d = (p - onehot) * rs[:, None]
+    if interpret:
+        d = p * rs[:, None]
+        idx = lab - j * bv
+        ok = (idx >= 0) & (idx < bv)
+        d = d.at[jnp.arange(bn), jnp.clip(idx, 0, bv - 1)].add(
+            jnp.where(ok, -rs, 0.0))
+    else:
+        onehot = (_tile_cols(j, bn, bv) == lab[:, None]).astype(_f32)
+        d = (p - onehot) * rs[:, None]
     if dcap is not None:
         d = d * dcap
     return d
 
 
-def _ce_bwd_dh_kernel(lab_ref, rs_ref, lse_ref, h_ref, w_ref, dh_out,
-                      acc_scr, *, bn, bv, vocab, n_v, transpose_w, softcap):
+def _ce_bwd_dh_kernel(np_ref, lab_ref, rs_ref, lse_ref, h_ref, w_ref, dh_out,
+                      acc_scr, *, bn, bv, vocab, vp, n_v, transpose_w,
+                      softcap, norm, eps, interpret):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         acc_scr[...] = jnp.zeros_like(acc_scr[...])
 
-    d = _dlogits_tile(h_ref[...], w_ref[...], lab_ref[...], rs_ref[...],
-                      lse_ref[...], j, bn=bn, bv=bv, vocab=vocab,
-                      transpose_w=transpose_w, softcap=softcap)
+    hn = apply_norm(h_ref[...], np_ref[...], norm, eps)
+    d = _dlogits_tile(hn, w_ref[...], lab_ref[...], rs_ref[...],
+                      lse_ref[...], j, bn=bn, bv=bv, vocab=vocab, vp=vp,
+                      transpose_w=transpose_w, softcap=softcap,
+                      interpret=interpret)
     w32 = w_ref[...].astype(_f32)
     if transpose_w:                       # w tile (D, bv): dh = d @ w^T
         acc_scr[...] += jnp.dot(d, w32.T, preferred_element_type=_f32)
@@ -304,8 +410,9 @@ def _ce_bwd_dh_kernel(lab_ref, rs_ref, lse_ref, h_ref, w_ref, dh_out,
         dh_out[...] = acc_scr[...].astype(dh_out.dtype)
 
 
-def _ce_bwd_dw_kernel(lab_ref, rs_ref, lse_ref, h_ref, w_ref, dw_out,
-                      acc_scr, *, bn, bv, vocab, n_r, transpose_w, softcap):
+def _ce_bwd_dw_kernel(np_ref, lab_ref, rs_ref, lse_ref, h_ref, w_ref, dw_out,
+                      acc_scr, *, bn, bv, vocab, vp, n_r, transpose_w,
+                      softcap, norm, eps, interpret):
     # grid (chunks, rows): the dW block for chunk j accumulates across the
     # inner row sweep in an fp32 VMEM scratch (accumulating in the output
     # dtype would round the partial sum per row tile — per-mille error for
@@ -317,10 +424,12 @@ def _ce_bwd_dw_kernel(lab_ref, rs_ref, lse_ref, h_ref, w_ref, dw_out,
     def _init():
         acc_scr[...] = jnp.zeros_like(acc_scr[...])
 
-    d = _dlogits_tile(h_ref[...], w_ref[...], lab_ref[...], rs_ref[...],
-                      lse_ref[...], j, bn=bn, bv=bv, vocab=vocab,
-                      transpose_w=transpose_w, softcap=softcap)
-    h32 = h_ref[...].astype(_f32)
+    hn = apply_norm(h_ref[...], np_ref[...], norm, eps)
+    d = _dlogits_tile(hn, w_ref[...], lab_ref[...], rs_ref[...],
+                      lse_ref[...], j, bn=bn, bv=bv, vocab=vocab, vp=vp,
+                      transpose_w=transpose_w, softcap=softcap,
+                      interpret=interpret)
+    h32 = hn.astype(_f32)
     if transpose_w:                       # dW tile (D, bv) = h^T @ d
         acc_scr[...] += jnp.dot(h32.T, d, preferred_element_type=_f32)
     else:                                 # dW tile (bv, D) = d^T @ h
@@ -329,6 +438,53 @@ def _ce_bwd_dw_kernel(lab_ref, rs_ref, lse_ref, h_ref, w_ref, dw_out,
     @pl.when(i == n_r - 1)
     def _flush():
         dw_out[...] = acc_scr[...].astype(dw_out.dtype)
+
+
+def _ce_bwd_fused_kernel(np_ref, lab_ref, rs_ref, lse_ref, h_ref, w_ref,
+                         dh_out, dw_out, dh_scr, dw_scr, *,
+                         bn, bv, vocab, vp, n_r, n_v, transpose_w, softcap,
+                         norm, eps, interpret):
+    """Combined d_hidden + d_W in ONE sweep: the logits tile is recomputed
+    once per grid step and feeds both products (the split schedule
+    recomputes it twice).  Requires min(n_r, n_v) == 1 — then the dh scratch
+    is either flushed per step (n_v == 1: each row block's sweep is a single
+    step) or accumulated over the whole inner-j sweep of the only row block
+    (n_r == 1), and symmetrically for dW, so neither output block is ever
+    revisited after a different block was written (Pallas TPU pipelining
+    does not re-fetch non-consecutively revisited output blocks)."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    hn = apply_norm(h_ref[...], np_ref[...], norm, eps)
+    d = _dlogits_tile(hn, w_ref[...], lab_ref[...], rs_ref[...],
+                      lse_ref[...], j, bn=bn, bv=bv, vocab=vocab, vp=vp,
+                      transpose_w=transpose_w, softcap=softcap,
+                      interpret=interpret)
+    w32 = w_ref[...].astype(_f32)
+    h32 = hn.astype(_f32)
+
+    @pl.when(j == 0)
+    def _init_dh():
+        dh_scr[...] = jnp.zeros_like(dh_scr[...])
+
+    @pl.when(i == 0)
+    def _init_dw():
+        dw_scr[...] = jnp.zeros_like(dw_scr[...])
+
+    if transpose_w:                       # w tile (D, bv)
+        dh_scr[...] += jnp.dot(d, w32.T, preferred_element_type=_f32)
+        dw_scr[...] += jnp.dot(h32.T, d, preferred_element_type=_f32)
+    else:                                 # w tile (bv, D)
+        dh_scr[...] += jnp.dot(d, w32, preferred_element_type=_f32)
+        dw_scr[...] += jnp.dot(d.T, h32, preferred_element_type=_f32)
+
+    @pl.when(j == n_v - 1)
+    def _flush_dh():
+        dh_out[...] = dh_scr[...].astype(dh_out.dtype)
+
+    @pl.when(i == n_r - 1)
+    def _flush_dw():
+        dw_out[...] = dw_scr[...].astype(dw_out.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -340,46 +496,55 @@ def _specs(bn, bv, D, transpose_w):
     w_spec = (pl.BlockSpec((D, bv), lambda i, j: (0, j)) if transpose_w
               else pl.BlockSpec((bv, D), lambda i, j: (j, 0)))
     vec_spec = pl.BlockSpec((bn,), lambda i, j: (i,))
-    return h_spec, w_spec, vec_spec
+    np_spec = pl.BlockSpec((2, D), lambda i, j: (0, 0))
+    return h_spec, w_spec, vec_spec, np_spec
 
 
 def _vp_of(w, transpose_w):
     return w.shape[1] if transpose_w else w.shape[0]
 
 
-def _ce_forward(h2, w, labels, *, vocab, transpose_w, softcap, bn, bv,
-                interpret):
+def _no_normp(D, normp=None):
+    return jnp.zeros((2, D), _f32) if normp is None else normp
+
+
+def _ce_forward(h2, w, normp, labels, *, vocab, transpose_w, softcap, norm,
+                eps, bn, bv, interpret):
+    KERNEL_CALLS["fwd"] += 1
     N, D = h2.shape
     n_r, n_v = N // bn, _vp_of(w, transpose_w) // bv
-    h_spec, w_spec, vec_spec = _specs(bn, bv, D, transpose_w)
+    h_spec, w_spec, vec_spec, np_spec = _specs(bn, bv, D, transpose_w)
     kern = functools.partial(_ce_fwd_kernel, bn=bn, bv=bv, vocab=vocab,
-                             n_v=n_v, transpose_w=transpose_w,
-                             softcap=softcap)
+                             vp=n_v * bv, n_v=n_v, transpose_w=transpose_w,
+                             softcap=softcap, norm=norm, eps=eps,
+                             interpret=interpret)
     return pl.pallas_call(
         kern,
         grid=(n_r, n_v),
-        in_specs=[vec_spec, h_spec, w_spec],
+        in_specs=[np_spec, vec_spec, h_spec, w_spec],
         out_specs=[vec_spec, vec_spec],
         out_shape=[jax.ShapeDtypeStruct((N,), _f32),
                    jax.ShapeDtypeStruct((N,), _f32)],
         scratch_shapes=[pltpu.VMEM((bn, 1), _f32)] * 3,
         interpret=interpret,
-    )(labels, h2, w)
+    )(_no_normp(D, normp), labels, h2, w)
 
 
-def _ce_forward_sampled(h2, w, seed, *, vocab, transpose_w, softcap, bn, bv,
-                        interpret):
+def _ce_forward_sampled(h2, w, normp, seed, *, vocab, transpose_w, softcap,
+                        norm, eps, bn, bv, interpret):
+    KERNEL_CALLS["fwd_sample"] += 1
     N, D = h2.shape
     n_r, n_v = N // bn, _vp_of(w, transpose_w) // bv
-    h_spec, w_spec, vec_spec = _specs(bn, bv, D, transpose_w)
+    h_spec, w_spec, vec_spec, np_spec = _specs(bn, bv, D, transpose_w)
     seed_spec = pl.BlockSpec((2,), lambda i, j: (0,))
-    kern = functools.partial(_ce_fwd_sample_kernel, bn=bn, bv=bv, vocab=vocab,
-                             n_v=n_v, transpose_w=transpose_w,
-                             softcap=softcap)
+    kern = functools.partial(_ce_fwd_sample_kernel, bn=bn, bv=bv,
+                             vocab=vocab, vp=n_v * bv, n_v=n_v,
+                             transpose_w=transpose_w, softcap=softcap,
+                             norm=norm, eps=eps)
     return pl.pallas_call(
         kern,
         grid=(n_r, n_v),
-        in_specs=[seed_spec, h_spec, w_spec],
+        in_specs=[np_spec, seed_spec, h_spec, w_spec],
         out_specs=[vec_spec, vec_spec, vec_spec],
         out_shape=[jax.ShapeDtypeStruct((N,), _f32),
                    jax.ShapeDtypeStruct((N,), _f32),
@@ -390,47 +555,78 @@ def _ce_forward_sampled(h2, w, seed, *, vocab, transpose_w, softcap, bn, bv,
                         pltpu.VMEM((bn, 1), jnp.int32),
                         pltpu.VMEM((bn, 1), _f32)],
         interpret=interpret,
-    )(seed, h2, w)
+    )(_no_normp(D, normp), seed, h2, w)
 
 
-def _ce_backward(h2, w, labels, rs, lse, *, vocab, transpose_w, softcap,
-                 bn, bv, interpret):
-    """(d_hidden, d_W) from two more vocab sweeps (no [N, V] buffer)."""
+def _ce_backward(h2, w, normp, labels, rs, lse, *, vocab, transpose_w,
+                 softcap, norm, eps, bn, bv, schedule, interpret):
+    """(d_hidden_normed, d_W) via vocab re-sweeps (no [N, V] buffer).
+
+    With a fused norm the returned d_hidden is the cotangent w.r.t. the
+    NORMED hidden (fp32); the caller pulls it back through the norm with
+    ``jax.vjp(apply_norm, ...)``."""
     N, D = h2.shape
     Vp = _vp_of(w, transpose_w)
     n_r, n_v = N // bn, Vp // bv
-    h_spec, w_spec, vec_spec = _specs(bn, bv, D, transpose_w)
+    dh_dtype = _f32 if norm is not None else h2.dtype
+    h_spec, w_spec, vec_spec, np_spec = _specs(bn, bv, D, transpose_w)
+    normp = _no_normp(D, normp)
+    dw_scr = pltpu.VMEM((D, bv) if transpose_w else (bv, D), _f32)
+
+    if schedule == "fused":
+        assert n_r == 1 or n_v == 1, (n_r, n_v)
+        KERNEL_CALLS["bwd_fused"] += 1
+        kern = functools.partial(
+            _ce_bwd_fused_kernel, bn=bn, bv=bv, vocab=vocab, vp=Vp, n_r=n_r,
+            n_v=n_v, transpose_w=transpose_w, softcap=softcap, norm=norm,
+            eps=eps, interpret=interpret)
+        dh, dw = pl.pallas_call(
+            kern,
+            grid=(n_r, n_v),
+            in_specs=[np_spec, vec_spec, vec_spec, vec_spec, h_spec, w_spec],
+            out_specs=[pl.BlockSpec((bn, D), lambda i, j: (i, 0)), w_spec],
+            out_shape=[jax.ShapeDtypeStruct((N, D), dh_dtype),
+                       jax.ShapeDtypeStruct(w.shape, w.dtype)],
+            scratch_shapes=[pltpu.VMEM((bn, D), _f32), dw_scr],
+            interpret=interpret,
+        )(normp, labels, rs, lse, h2, w)
+        return dh, dw
+
+    assert schedule == "split", schedule
+    KERNEL_CALLS["bwd_split"] += 1
     kern_h = functools.partial(_ce_bwd_dh_kernel, bn=bn, bv=bv, vocab=vocab,
-                               n_v=n_v, transpose_w=transpose_w,
-                               softcap=softcap)
+                               vp=Vp, n_v=n_v, transpose_w=transpose_w,
+                               softcap=softcap, norm=norm, eps=eps,
+                               interpret=interpret)
     dh = pl.pallas_call(
         kern_h,
         grid=(n_r, n_v),
-        in_specs=[vec_spec, vec_spec, vec_spec, h_spec, w_spec],
+        in_specs=[np_spec, vec_spec, vec_spec, vec_spec, h_spec, w_spec],
         out_specs=pl.BlockSpec((bn, D), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((N, D), h2.dtype),
+        out_shape=jax.ShapeDtypeStruct((N, D), dh_dtype),
         scratch_shapes=[pltpu.VMEM((bn, D), _f32)],
         interpret=interpret,
-    )(labels, rs, lse, h2, w)
+    )(normp, labels, rs, lse, h2, w)
 
     # rows innermost so each dW chunk block accumulates while resident
     hT_spec = pl.BlockSpec((bn, D), lambda j, i: (i, 0))
     wT_spec = (pl.BlockSpec((D, bv), lambda j, i: (0, j)) if transpose_w
                else pl.BlockSpec((bv, D), lambda j, i: (j, 0)))
     vT_spec = pl.BlockSpec((bn,), lambda j, i: (i,))
+    npT_spec = pl.BlockSpec((2, D), lambda j, i: (0, 0))
     kern_w = functools.partial(_ce_bwd_dw_kernel, bn=bn, bv=bv, vocab=vocab,
-                               n_r=n_r, transpose_w=transpose_w,
-                               softcap=softcap)
+                               vp=Vp, n_r=n_r, transpose_w=transpose_w,
+                               softcap=softcap, norm=norm, eps=eps,
+                               interpret=interpret)
     dw = pl.pallas_call(
         kern_w,
         grid=(n_v, n_r),
-        in_specs=[vT_spec, vT_spec, vT_spec, hT_spec, wT_spec],
+        in_specs=[npT_spec, vT_spec, vT_spec, vT_spec, hT_spec, wT_spec],
         out_specs=wT_spec,
         out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
-        scratch_shapes=[pltpu.VMEM((D, bv) if transpose_w else (bv, D),
-                                   _f32)],
+        scratch_shapes=[dw_scr],
         interpret=interpret,
-    )(labels, rs, lse, h2, w)
+    )(normp, labels, rs, lse, h2, w)
     return dh, dw
 
 
@@ -442,64 +638,203 @@ def _float0(x):
     return np.zeros(x.shape, dtype=jax.dtypes.float0)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
-def _fused_nll(h2, w, labels, rowscale, vocab, transpose_w, softcap, bn, bv,
-               interpret):
+_NONDIFF = (5, 6, 7, 8, 9, 10, 11, 12, 13)
+#           vocab, transpose_w, softcap, norm, eps, bn, bv, schedule,
+#           interpret
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=_NONDIFF)
+def _fused_nll(h2, w, normp, labels, rowscale, vocab, transpose_w, softcap,
+               norm, eps, bn, bv, schedule, interpret):
     """sum(rowscale * nll) with labels fixed; logits never materialize."""
-    loss, _ = _fused_nll_fwd(h2, w, labels, rowscale, vocab, transpose_w,
-                             softcap, bn, bv, interpret)
+    loss, _ = _fused_nll_fwd(h2, w, normp, labels, rowscale, vocab,
+                             transpose_w, softcap, norm, eps, bn, bv,
+                             schedule, interpret)
     return loss
 
 
-def _fused_nll_fwd(h2, w, labels, rowscale, vocab, transpose_w, softcap, bn,
-                   bv, interpret):
-    lse, ll = _ce_forward(h2, w, labels, vocab=vocab, transpose_w=transpose_w,
-                          softcap=softcap, bn=bn, bv=bv, interpret=interpret)
-    loss = jnp.sum(rowscale * (lse - ll))
-    return loss, (h2, w, labels, rowscale, lse, ll)
-
-
-def _fused_nll_bwd(vocab, transpose_w, softcap, bn, bv, interpret, res, g):
-    h2, w, labels, rowscale, lse, ll = res
-    rs = (rowscale * g).astype(_f32)
-    dh, dw = _ce_backward(h2, w, labels, rs, lse, vocab=vocab,
+def _fused_nll_fwd(h2, w, normp, labels, rowscale, vocab, transpose_w,
+                   softcap, norm, eps, bn, bv, schedule, interpret):
+    lse, ll = _ce_forward(h2, w, normp, labels, vocab=vocab,
                           transpose_w=transpose_w, softcap=softcap,
-                          bn=bn, bv=bv, interpret=interpret)
-    return dh, dw, _float0(labels), (lse - ll) * g
+                          norm=norm, eps=eps, bn=bn, bv=bv,
+                          interpret=interpret)
+    loss = jnp.sum(rowscale * (lse - ll))
+    return loss, (h2, w, normp, labels, rowscale, lse, ll)
+
+
+def _norm_pullback(h2, normp, norm, eps, dhn):
+    """Pull the kernel's d(normed hidden) back through the norm producer
+    with the differentiable twin of the in-kernel math (exact: same fp32
+    statistics, same cast)."""
+    if norm is None:
+        return dhn.astype(h2.dtype), jnp.zeros_like(normp)
+    _, pull = jax.vjp(lambda x, p: apply_norm(x, p, norm, eps).astype(_f32),
+                      h2, normp)
+    return pull(dhn)
+
+
+def _fused_nll_bwd(vocab, transpose_w, softcap, norm, eps, bn, bv, schedule,
+                   interpret, res, g):
+    h2, w, normp, labels, rowscale, lse, ll = res
+    rs = (rowscale * g).astype(_f32)
+    dhn, dw = _ce_backward(h2, w, normp, labels, rs, lse, vocab=vocab,
+                           transpose_w=transpose_w, softcap=softcap,
+                           norm=norm, eps=eps, bn=bn, bv=bv,
+                           schedule=schedule, interpret=interpret)
+    dh, dnormp = _norm_pullback(h2, normp, norm, eps, dhn)
+    return dh, dw, dnormp, _float0(labels), (lse - ll) * g
 
 
 _fused_nll.defvjp(_fused_nll_fwd, _fused_nll_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
-def _fused_sampled_nll(h2, w, seed, rowscale, vocab, transpose_w, softcap,
-                       bn, bv, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=_NONDIFF)
+def _fused_sampled_nll(h2, w, normp, seed, rowscale, vocab, transpose_w,
+                       softcap, norm, eps, bn, bv, schedule, interpret):
     """sum(rowscale * nll) against in-sweep sampled labels (GNB path)."""
-    loss, _ = _fused_sampled_nll_fwd(h2, w, seed, rowscale, vocab,
-                                     transpose_w, softcap, bn, bv, interpret)
+    loss, _ = _fused_sampled_nll_fwd(h2, w, normp, seed, rowscale, vocab,
+                                     transpose_w, softcap, norm, eps, bn, bv,
+                                     schedule, interpret)
     return loss
 
 
-def _fused_sampled_nll_fwd(h2, w, seed, rowscale, vocab, transpose_w,
-                           softcap, bn, bv, interpret):
+def _fused_sampled_nll_fwd(h2, w, normp, seed, rowscale, vocab, transpose_w,
+                           softcap, norm, eps, bn, bv, schedule, interpret):
     lse, ll, yhat = _ce_forward_sampled(
-        h2, w, seed, vocab=vocab, transpose_w=transpose_w, softcap=softcap,
-        bn=bn, bv=bv, interpret=interpret)
+        h2, w, normp, seed, vocab=vocab, transpose_w=transpose_w,
+        softcap=softcap, norm=norm, eps=eps, bn=bn, bv=bv,
+        interpret=interpret)
     loss = jnp.sum(rowscale * (lse - ll))
-    return loss, (h2, w, seed, yhat, rowscale, lse, ll)
+    return loss, (h2, w, normp, seed, yhat, rowscale, lse, ll)
 
 
-def _fused_sampled_nll_bwd(vocab, transpose_w, softcap, bn, bv, interpret,
-                           res, g):
-    h2, w, seed, yhat, rowscale, lse, ll = res
+def _fused_sampled_nll_bwd(vocab, transpose_w, softcap, norm, eps, bn, bv,
+                           schedule, interpret, res, g):
+    h2, w, normp, seed, yhat, rowscale, lse, ll = res
     rs = (rowscale * g).astype(_f32)
-    dh, dw = _ce_backward(h2, w, yhat, rs, lse, vocab=vocab,
-                          transpose_w=transpose_w, softcap=softcap,
-                          bn=bn, bv=bv, interpret=interpret)
-    return dh, dw, _float0(seed), (lse - ll) * g
+    dhn, dw = _ce_backward(h2, w, normp, yhat, rs, lse, vocab=vocab,
+                           transpose_w=transpose_w, softcap=softcap,
+                           norm=norm, eps=eps, bn=bn, bv=bv,
+                           schedule=schedule, interpret=interpret)
+    dh, dnormp = _norm_pullback(h2, normp, norm, eps, dhn)
+    return dh, dw, dnormp, _float0(seed), (lse - ll) * g
 
 
 _fused_sampled_nll.defvjp(_fused_sampled_nll_fwd, _fused_sampled_nll_bwd)
+
+
+# ---------------------------------------------------------------------------
+# custom_jvp twin: the Hutchinson HVP path
+#
+# ``jax.jvp(jax.grad(f))`` cannot cross a custom_vjp (no JVP rule for the
+# residual application), and the Pallas backward kernels can never sit
+# inside an HVP anyway (forward-mode would have to differentiate them).
+# This twin keeps the Pallas forward as the primal and defines the tangent
+# as ONE checkpointed chunked jnp sweep that also recomputes the
+# (lse, label-logit) coefficients online — linear in (dh, dw, drs), so
+# JAX's transpose machinery derives a chunked jnp backward, and because the
+# rule is built from differentiable jnp (plus a recursive primal self-call
+# that re-enters this boundary), it composes to arbitrary order.
+
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _fused_nll_jvp(h2, w, labels, rowscale, vocab, transpose_w, softcap,
+                   bn, bv, interpret):
+    lse, ll = _ce_forward(h2, w, None, labels, vocab=vocab,
+                          transpose_w=transpose_w, softcap=softcap,
+                          norm=None, eps=0.0, bn=bn, bv=bv,
+                          interpret=interpret)
+    return jnp.sum(rowscale * (lse - ll))
+
+
+def _chunk_z(h2, w, dh2, dw, c, bvt, *, transpose_w, softcap, vocab):
+    """One vocab chunk's masked logits ``s`` and (optionally) their
+    tangent ``ds`` in the unembed convention.  Pass dh2=dw=None for the
+    primal-only variant."""
+    cdt = h2.dtype
+    axis = 1 if transpose_w else 0
+    wc = jax.lax.dynamic_slice_in_dim(w, c * bvt, bvt, axis=axis)
+    wc = wc.astype(cdt) if transpose_w else wc.astype(cdt).T
+    raw = jnp.dot(h2, wc, preferred_element_type=_f32)
+    draw = None
+    if dh2 is not None:
+        dwc = jax.lax.dynamic_slice_in_dim(dw, c * bvt, bvt, axis=axis)
+        dwc = dwc.astype(cdt) if transpose_w else dwc.astype(cdt).T
+        draw = (jnp.dot(dh2, wc, preferred_element_type=_f32)
+                + jnp.dot(h2, dwc, preferred_element_type=_f32))
+    if softcap is not None:
+        t = jnp.tanh(raw / softcap)
+        z = softcap * t
+        dz = None if draw is None else (1.0 - t * t) * draw
+    else:
+        z, dz = raw, draw
+    cols = c * bvt + jnp.arange(bvt, dtype=jnp.int32)[None, :]
+    valid = cols < vocab
+    s = jnp.where(valid, z, NEG_INF)
+    return s, dz, cols
+
+
+@_fused_nll_jvp.defjvp
+def _fused_nll_jvp_rule(vocab, transpose_w, softcap, bn, bv, interpret,
+                        primals, tangents):
+    h2, w, labels, rowscale = primals
+    dh2, dw, _dlab, drs = tangents
+    KERNEL_CALLS["jvp_rule"] += 1
+    # primal through the custom_jvp boundary itself: at higher orders the
+    # rule re-enters here instead of hitting a bare (non-differentiable)
+    # pallas_call
+    loss = _fused_nll_jvp(h2, w, labels, rowscale, vocab, transpose_w,
+                          softcap, bn, bv, interpret)
+
+    # Two chunked jnp sweeps.  Sweep A (a checkpointed scan, primal-only)
+    # recomputes the online (lse, label-logit) coefficients; sweep B is
+    # LINEAR in (dh2, dw) and accumulates the tangent reductions
+    # dlse = sum_c p_c . dz_c (p = exp(s - lse)) and d(label-logit).
+    # Splitting matters: mixing primal and tangent work in one scan leaves
+    # the scan untransposable (lax.scan partial-eval cannot separate the
+    # linear part when tangents enter as body constants — the transpose
+    # asserts on undefined-primal residuals), while this layout transposes
+    # into the standard chunked CE backward and stays jvp-able for higher
+    # orders.  Sweep B must also be an UNROLLED Python loop rather than a
+    # scan, for the same constants reason; its chunk count is small
+    # (Vp / 2048) and under jax.grad its per-chunk softmax residuals live
+    # only on the Hutchinson sub-batch (hess_subbatch rows), never on the
+    # training batch, which keeps the custom_vjp kernels.
+    N, D = h2.shape
+    Vp = _vp_of(w, transpose_w)
+    bvt = vocab_chunk(Vp, 2048, 128)
+    n_c = Vp // bvt
+    lab = labels.reshape(-1)
+    dh2 = dh2.astype(h2.dtype)
+
+    def body_primal(carry, c):
+        m, l, ll = carry
+        s, _, cols = _chunk_z(h2, w, None, None, c, bvt,
+                              transpose_w=transpose_w, softcap=softcap,
+                              vocab=vocab)
+        m_new, l_new = online_lse_step(m, l, s, cols < vocab)
+        ll = ll + jnp.where(cols == lab[:, None], s, 0.0).sum(-1)
+        return (m_new, l_new, ll), None
+
+    init = (jnp.full((N,), NEG_INF, _f32), jnp.zeros((N,), _f32),
+            jnp.zeros((N,), _f32))
+    (m, l, ll), _ = jax.lax.scan(jax.checkpoint(body_primal), init,
+                                 jnp.arange(n_c))
+    lse = m + jnp.log(jnp.maximum(l, 1e-37))
+
+    u = jnp.zeros((N,), _f32)
+    dll = jnp.zeros((N,), _f32)
+    for c in range(n_c):
+        s, dz, cols = _chunk_z(h2, w, dh2, dw, c, bvt,
+                               transpose_w=transpose_w, softcap=softcap,
+                               vocab=vocab)
+        p = jnp.exp(s - lse[:, None])        # 0 on padded cols (s=NEG_INF)
+        u = u + (p * dz).sum(-1)
+        dll = dll + jnp.where(cols == lab[:, None], dz, 0.0).sum(-1)
+    dloss = jnp.sum(rowscale * (u - dll)) \
+        + jnp.sum(jnp.asarray(drs, _f32) * (lse - ll))
+    return loss, dloss
 
 
 # ---------------------------------------------------------------------------
@@ -537,63 +872,149 @@ def _prep(hidden, labels_or_none, mask, block_n):
     return h2, lab, rs, n_valid, bn
 
 
-def _pick_bv(Vp, block_v):
+def _pick_bv(Vp, block_v, interpret=False):
+    """Vocab chunk for an *explicit* request; interpret mode (CPU CI)
+    clamps to the whole padded vocab at small Vp so an over-chunked request
+    cannot unroll a pathological number of interpreter grid cells."""
     assert Vp % 128 == 0, f"padded vocab {Vp} not a multiple of 128"
+    if interpret and Vp // vocab_chunk(Vp, block_v, 128) > 64:
+        return vocab_chunk(Vp, max(block_v, Vp // 64), 128)
     return vocab_chunk(Vp, block_v, 128)
 
 
+def _resolve_blocks(hidden, Vp, *, transpose_w, softcap, norm, block_n,
+                    block_v, schedule, interpret):
+    """(bn, bv, schedule): explicit blocks pass through (legacy/unit-test
+    path, DEFAULT_BN/BV filling the unset one); both-None routes through
+    the shape-keyed autotuner."""
+    D = hidden.shape[-1]
+    N = 1
+    for s in hidden.shape[:-1]:
+        N *= s
+    n_pad = N + ((-N) % 8)
+    if block_n is None and block_v is None:
+        from .autotune import get_tuned
+        t = get_tuned(n_pad, D, Vp, dtype=hidden.dtype,
+                      transpose_w=transpose_w, softcap=softcap, norm=norm,
+                      interpret=interpret)
+        bn, bv = t.bn, t.bv
+        schedule = schedule or t.schedule
+    else:
+        bn, _ = _pick_block(N, block_n or DEFAULT_BN, 8)
+        bv = _pick_bv(Vp, block_v or DEFAULT_BV, interpret)
+    n_r, n_v = n_pad // bn, Vp // bv
+    if schedule is None:
+        schedule = "fused" if (n_r == 1 or n_v == 1) else "split"
+    if schedule == "fused" and not (n_r == 1 or n_v == 1):
+        schedule = "split"
+    return bn, bv, schedule
+
+
+def _pack_norm(norm_kind, norm_scale, norm_bias, D):
+    if norm_kind is None:
+        return None, None
+    assert norm_kind in ("rms", "ln"), norm_kind
+    scale = jnp.asarray(norm_scale, _f32)
+    bias = (jnp.zeros((D,), _f32) if norm_bias is None
+            else jnp.asarray(norm_bias, _f32))
+    return norm_kind, jnp.stack([scale, bias])
+
+
 def fused_lm_loss(hidden, w, labels, mask=None, *, vocab_size,
-                  transpose_w=False, softcap=None, block_n=DEFAULT_BN,
-                  block_v=DEFAULT_BV, interpret=None):
+                  transpose_w=False, softcap=None, block_n=None,
+                  block_v=None, schedule=None, norm_kind=None,
+                  norm_scale=None, norm_bias=None, norm_eps=1e-6,
+                  interpret=None):
     """Masked-mean LM cross-entropy without materializing logits.
 
     hidden (..., D); w (Vp, D) tied or (D, Vp) untied (``transpose_w``);
     labels (...) int; mask (...) optional.  Returns ``(loss, n_valid)`` —
     the batch factor the GNB refresh folds into the Hessian-EMA.
-    Differentiable in ``hidden`` and ``w`` via the fused backward sweeps.
+    Differentiable in ``hidden``, ``w`` and the norm parameters via the
+    fused backward sweeps.  With ``norm_kind`` ("rms"/"ln") ``hidden`` is
+    PRE-final-norm and the norm applies inside the kernel (producer
+    fusion); block sizes default to the autotuner's pick for this shape.
     """
-    h2, lab, rs, n_valid, bn = _prep(hidden, labels, mask, block_n)
-    bv = _pick_bv(_vp_of(w, transpose_w), block_v)
     softcap = float(softcap) if softcap else None
     interpret = _interpret_default() if interpret is None else interpret
-    loss = _fused_nll(h2, w, lab, rs, int(vocab_size), bool(transpose_w),
-                      softcap, bn, bv, bool(interpret))
+    norm, normp = _pack_norm(norm_kind, norm_scale, norm_bias,
+                             hidden.shape[-1])
+    bn, bv, schedule = _resolve_blocks(
+        hidden, _vp_of(w, transpose_w), transpose_w=bool(transpose_w),
+        softcap=softcap, norm=norm, block_n=block_n, block_v=block_v,
+        schedule=schedule, interpret=bool(interpret))
+    h2, lab, rs, n_valid, bn = _prep(hidden, labels, mask, bn)
+    loss = _fused_nll(h2, w, _no_normp(h2.shape[1], normp), lab, rs,
+                      int(vocab_size), bool(transpose_w), softcap, norm,
+                      float(norm_eps), bn, bv, schedule, bool(interpret))
     return loss, n_valid
 
 
 def fused_lm_loss_sampled(hidden, w, rng, mask=None, *, vocab_size,
-                          transpose_w=False, softcap=None, block_n=DEFAULT_BN,
-                          block_v=DEFAULT_BV, interpret=None):
+                          transpose_w=False, softcap=None, block_n=None,
+                          block_v=None, schedule=None, norm_kind=None,
+                          norm_scale=None, norm_bias=None, norm_eps=1e-6,
+                          interpret=None):
     """GNB sampled-label CE in one sweep: draws ``yhat ~ softmax(logits)``
     by online chunked Gumbel-argmax *inside* the forward kernel and returns
     the masked-mean NLL against it (``(loss, n_valid)``).  The gradient of
     ``loss`` is Algorithm 2's ``ghat`` contribution through this stage —
     logits-free in both directions."""
-    h2, _, rs, n_valid, bn = _prep(hidden, None, mask, block_n)
-    bv = _pick_bv(_vp_of(w, transpose_w), block_v)
     softcap = float(softcap) if softcap else None
     interpret = _interpret_default() if interpret is None else interpret
+    norm, normp = _pack_norm(norm_kind, norm_scale, norm_bias,
+                             hidden.shape[-1])
+    bn, bv, schedule = _resolve_blocks(
+        hidden, _vp_of(w, transpose_w), transpose_w=bool(transpose_w),
+        softcap=softcap, norm=norm, block_n=block_n, block_v=block_v,
+        schedule=schedule, interpret=bool(interpret))
+    h2, _, rs, n_valid, bn = _prep(hidden, None, mask, bn)
     seed = seed_from_key(rng)
-    loss = _fused_sampled_nll(h2, w, seed, rs, int(vocab_size),
-                              bool(transpose_w), softcap, bn, bv,
+    loss = _fused_sampled_nll(h2, w, _no_normp(h2.shape[1], normp), seed, rs,
+                              int(vocab_size), bool(transpose_w), softcap,
+                              norm, float(norm_eps), bn, bv, schedule,
                               bool(interpret))
     return loss, n_valid
 
 
+def fused_lm_loss_jvp(hidden, w, labels, mask=None, *, vocab_size,
+                      transpose_w=False, softcap=None, block_n=None,
+                      block_v=None, interpret=None):
+    """The labeled NLL through the custom_jvp twin: Pallas forward primal,
+    chunked-jnp linear tangent (transposable -> chunked backward), composes
+    under ``jax.jvp(jax.grad(.))`` — the Hutchinson estimator's path.  No
+    kernel-fused norm here (apply it in jnp first: the tangent must flow
+    through the norm, which the chunked rule handles for free)."""
+    softcap = float(softcap) if softcap else None
+    interpret = _interpret_default() if interpret is None else interpret
+    bn, bv, _ = _resolve_blocks(
+        hidden, _vp_of(w, transpose_w), transpose_w=bool(transpose_w),
+        softcap=softcap, norm=None, block_n=block_n, block_v=block_v,
+        schedule="split", interpret=bool(interpret))
+    h2, lab, rs, n_valid, bn = _prep(hidden, labels, mask, bn)
+    loss = _fused_nll_jvp(h2, w, lab, rs, int(vocab_size),
+                          bool(transpose_w), softcap, bn, bv,
+                          bool(interpret))
+    return loss, n_valid
+
+
 def fused_lm_sample(hidden, w, rng, *, vocab_size, transpose_w=False,
-                    softcap=None, block_n=DEFAULT_BN, block_v=DEFAULT_BV,
+                    softcap=None, block_n=None, block_v=None,
                     interpret=None):
     """The sampled labels alone (tests / diagnostics): yhat shaped like
     ``hidden[..., 0]``."""
-    shp = hidden.shape[:-1]
-    h2, _, _, _, bn = _prep(hidden, None, None, block_n)
-    bv = _pick_bv(_vp_of(w, transpose_w), block_v)
     softcap = float(softcap) if softcap else None
     interpret = _interpret_default() if interpret is None else interpret
+    shp = hidden.shape[:-1]
+    bn, bv, _ = _resolve_blocks(
+        hidden, _vp_of(w, transpose_w), transpose_w=bool(transpose_w),
+        softcap=softcap, norm=None, block_n=block_n, block_v=block_v,
+        schedule="split", interpret=bool(interpret))
+    h2, _, _, _, bn = _prep(hidden, None, None, bn)
     _, _, yhat = _ce_forward_sampled(
-        h2, w, seed_from_key(rng), vocab=int(vocab_size),
-        transpose_w=bool(transpose_w), softcap=softcap, bn=bn, bv=bv,
-        interpret=bool(interpret))
+        h2, w, None, seed_from_key(rng), vocab=int(vocab_size),
+        transpose_w=bool(transpose_w), softcap=softcap, norm=None, eps=0.0,
+        bn=bn, bv=bv, interpret=bool(interpret))
     n = 1
     for s in shp:
         n *= s
@@ -605,14 +1026,20 @@ def fused_lm_sample(hidden, w, rng, *, vocab_size, transpose_w=False,
 # flash_attention.attention_hbm_bytes_flash)
 
 
-def lm_loss_hbm_bytes_fused(N, D, V, *, bytes_h=2, bytes_w=4) -> int:
+def lm_loss_hbm_bytes_fused(N, D, V, *, bytes_h=2, bytes_w=4,
+                            norm_fused=False) -> int:
     """Fused path: hidden and W stream once per sweep (1 forward + 2
     backward), outputs are d_hidden + d_W + four (N,) vectors.  No term
-    scales with N*V."""
+    scales with N*V.  ``norm_fused`` removes the separate final-norm pass's
+    (N, D) write + read — the kernel consumes pre-norm tiles and norms in
+    VMEM."""
     h = N * D * bytes_h
     wb = V * D * bytes_w
     vecs = 4 * N * 4
-    return 3 * (h + wb) + h + wb + vecs
+    total = 3 * (h + wb) + h + wb + vecs
+    if not norm_fused:
+        total += 2 * h  # standalone norm: write normed (N, D), re-read it
+    return total
 
 
 def lm_loss_hbm_bytes_unfused(N, D, V, *, bytes_h=2, bytes_w=4,

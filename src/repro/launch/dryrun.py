@@ -57,8 +57,15 @@ def lower_cell(arch: str, shape_name: str, mesh, *, opt: str = "sophia_g",
                fsdp: bool = True, remat: str = "full",
                attn_impl: str = "auto", donate: bool = True,
                grad_accum: int = 1, state_dtype: str = "float32",
-               moe_impl: str = "gspmd", seq_shard: bool = False):
-    """Returns (lowered, meta) for one (arch, shape) cell on ``mesh``."""
+               moe_impl: str = "gspmd", seq_shard: bool = False,
+               fused_loss: bool = False):
+    """Returns (lowered, meta) for one (arch, shape) cell on ``mesh``.
+
+    ``fused_loss`` is explicitly False here (overriding the trainer
+    default): this harness lowers on the CPU host platform, where the
+    Pallas kernel runs in interpret mode and its grid unrolls at trace
+    time — at production vocab sizes that makes lowering pathological.
+    Pass True only for small-vocab cells."""
     cfg = get_config(arch)
     cell = input_specs(cfg, shape_name)
     assert cell is not None
@@ -72,7 +79,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, opt: str = "sophia_g",
     if cell.kind == "train":
         tc = TrainerConfig(optimizer=opt, remat=remat, attn_impl=attn_impl,
                            total_steps=100_000, grad_accum=grad_accum,
-                           state_dtype=state_dtype)
+                           state_dtype=state_dtype, fused_loss=fused_loss)
         init_fn, train_step = make_train_fns(cfg, tc)
         state_shape = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
         pspecs = partition_params(state_shape.params, mesh, fsdp=fsdp)
@@ -221,14 +228,15 @@ def analyse(lowered, meta, mesh, shape_name: str) -> dict:
 
 
 def run_cell(arch, shape_name, *, multi_pod=False, opt="sophia_g",
-             fsdp=True, remat="full", attn_impl="auto"):
+             fsdp=True, remat="full", attn_impl="auto", fused_loss=False):
     cfg = get_config(arch)
     ok, reason = applicable(cfg, shape_name)
     if not ok:
         return {"arch": arch, "shape": shape_name, "skipped": reason}
     mesh = make_production_mesh(multi_pod=multi_pod)
     lowered, meta = lower_cell(arch, shape_name, mesh, opt=opt, fsdp=fsdp,
-                               remat=remat, attn_impl=attn_impl)
+                               remat=remat, attn_impl=attn_impl,
+                               fused_loss=fused_loss)
     rec = analyse(lowered, meta, mesh, shape_name)
     rec.update({"opt": opt, "fsdp": fsdp, "remat": remat})
     return rec
@@ -243,6 +251,10 @@ def main():
     ap.add_argument("--opt", default="sophia_g")
     ap.add_argument("--no-fsdp", action="store_true")
     ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--fused-loss", action="store_true",
+                    help="lower the Pallas fused loss too (interpret-mode "
+                         "trace unrolling is slow at production vocabs; "
+                         "off by default in this harness only)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -263,7 +275,7 @@ def main():
         try:
             rec = run_cell(arch, shape, multi_pod=args.multi_pod,
                            opt=args.opt, fsdp=not args.no_fsdp,
-                           remat=args.remat)
+                           remat=args.remat, fused_loss=args.fused_loss)
         except Exception as e:  # record the failure, keep going
             traceback.print_exc()
             rec = {"arch": arch, "shape": shape, "error": repr(e)[:500]}

@@ -9,6 +9,21 @@ Collective bytes are NOT in cost_analysis: we parse the compiled HLO text,
 build a symbol table of instruction result sizes, and sum the *operand*
 sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
 collective-permute (counting async ``-start`` once, skipping ``-done``).
+
+Predicted vs measured (the fused-CE autotuner's pruning model)
+--------------------------------------------------------------
+The same HBM roofline that :func:`loss_stage_seconds` evaluates per *path*
+(fused vs unfused) is evaluated per *candidate block config* by
+``kernels.autotune.predict_seconds``: each kernel pass contributes
+``max(flops / PEAK_FLOPS, bytes / HBM_BW)`` where the bytes term counts
+the tiles each grid arrangement actually streams (e.g. the backward
+re-reads W once per row-block, so shrinking ``bn`` multiplies W traffic).
+The prediction is deliberately coarse — it only has to *rank* candidates
+so the top-K survive to measurement (``MEASURE_TOP_K``); wall-clock
+timing of the survivors picks the winner, and ONLY measured entries
+persist to the on-disk cache.  Roofline-only mode (``measure=False``,
+used by the fast CI tier) stops after ranking: deterministic, hermetic,
+no timing noise in version control.
 """
 from __future__ import annotations
 
@@ -120,7 +135,11 @@ def loss_stage_seconds(batch_tokens: int, d_model: int, padded_vocab: int,
 
     ``fused=False`` models the legacy path's ~5 HBM crossings of the fp32
     ``[B*T, V]`` logits; ``fused=True`` models the logits-free kernel
-    (kernels/fused_ce.py): 3 streams of hidden+W, no N*V term."""
+    (kernels/fused_ce.py): 3 streams of hidden+W, no N*V term.
+
+    This is the per-path overlay.  The per-block-config variant the
+    autotuner ranks candidates with is ``kernels.autotune.predict_seconds``
+    (see the module docstring above on the predicted-vs-measured split)."""
     from ..kernels.fused_ce import (lm_loss_hbm_bytes_fused,
                                     lm_loss_hbm_bytes_unfused)
     fn = lm_loss_hbm_bytes_fused if fused else lm_loss_hbm_bytes_unfused

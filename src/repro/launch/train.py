@@ -113,9 +113,16 @@ def main(argv=None):
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--remat", default="none")
     ap.add_argument("--fused-kernel", action="store_true")
-    ap.add_argument("--fused-loss", action="store_true",
+    ap.add_argument("--fused-loss", action=argparse.BooleanOptionalAction,
+                    default=True,
                     help="Pallas logits-free LM loss + in-sweep GNB "
-                         "sampling (kernels/fused_ce.py)")
+                         "sampling (kernels/fused_ce.py, autotuned block "
+                         "sizes); --no-fused-loss falls back to the "
+                         "chunked jnp sweep")
+    ap.add_argument("--retune", action="store_true",
+                    help="re-run measured fused-CE autotuning for this "
+                         "run's loss shape before training (ignores the "
+                         "on-disk cache; see README 'Fused loss')")
     ap.add_argument("--compress-grads", action="store_true",
                     help="in-collective int8 all-reduce over the fsdp axis")
     ap.add_argument("--compress-hess", action="store_true",
@@ -153,6 +160,21 @@ def main(argv=None):
         compress_grads=args.compress_grads,
         compress_hess=args.compress_hess,
         state_dtype=args.state_dtype, seed=args.seed)
+    if args.retune and tc.fused_loss:
+        # eager measured tuning for this run's exact hot-path loss shape;
+        # the result persists to the on-disk cache so the jitted step's
+        # trace picks it up (kernels/autotune.py)
+        from ..kernels.autotune import tune_shape
+        n_rows = (args.global_batch // max(1, args.grad_accum)) \
+            * args.seq_len
+        tuned = tune_shape(
+            n_rows, cfg.d_model, cfg.padded_vocab, dtype=cfg.dtype,
+            transpose_w=not cfg.tie_embeddings,
+            softcap=cfg.final_logit_softcap, norm=cfg.norm_type,
+            refresh=True)
+        print(f"[retune] fused CE {n_rows}x{cfg.d_model}x"
+              f"{cfg.padded_vocab}: bn={tuned.bn} bv={tuned.bv} "
+              f"schedule={tuned.schedule} ({tuned.source})")
     src = make_source(DataConfig(
         seq_len=args.seq_len, global_batch=args.global_batch,
         vocab_size=cfg.vocab_size, seed=args.seed, source=args.data,

@@ -88,7 +88,7 @@ def _cross_kv(p, enc_out, cfg: ModelConfig):
 
 
 def decode_train_hidden(cfg: ModelConfig, params, tokens, enc_out, *,
-                        remat="none"):
+                        remat="none", final_norm=True):
     """Teacher-forced decoder trunk. tokens (B, S_tgt) -> final-norm
     hidden (the loss paths skip the unembedding; models/loss.py)."""
     B, S = tokens.shape
@@ -109,7 +109,9 @@ def decode_train_hidden(cfg: ModelConfig, params, tokens, enc_out, *,
     if remat == "full":
         body = jax.checkpoint(body)
     x, _ = jax.lax.scan(body, x, params["decoder"])
-    return rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if final_norm:
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return x
 
 
 def decode_train(cfg: ModelConfig, params, tokens, enc_out, *, remat="none"):
@@ -119,9 +121,10 @@ def decode_train(cfg: ModelConfig, params, tokens, enc_out, *, remat="none"):
 
 
 def forward_hidden(cfg: ModelConfig, params, tokens, *, frames=None,
-                   remat="none", **_):
+                   remat="none", final_norm=True, **_):
     enc_out = encode(cfg, params, frames, remat=remat)
-    return decode_train_hidden(cfg, params, tokens, enc_out, remat=remat), \
+    return decode_train_hidden(cfg, params, tokens, enc_out, remat=remat,
+                               final_norm=final_norm), \
         jnp.zeros((), jnp.float32)
 
 
@@ -136,9 +139,10 @@ def loss_fn(cfg: ModelConfig, params, batch, *, remat="none",
             loss_impl=None, **_):
     from .loss import lm_loss
     hidden, aux = forward_hidden(cfg, params, batch["tokens"],
-                                 frames=batch["frames"], remat=remat)
+                                 frames=batch["frames"], remat=remat,
+                                 final_norm=False)
     ce, _ = lm_loss(cfg, params, hidden, batch["labels"],
-                    batch.get("mask"), impl=loss_impl)
+                    batch.get("mask"), impl=loss_impl, pre_norm="rms")
     return ce + aux, {"ce": ce, "aux": aux}
 
 
@@ -146,9 +150,10 @@ def sampled_loss_fn(cfg: ModelConfig, params, batch, rng, *, remat="none",
                     loss_impl=None, **_):
     from .loss import lm_loss_sampled
     hidden, _ = forward_hidden(cfg, params, batch["tokens"],
-                               frames=batch["frames"], remat=remat)
+                               frames=batch["frames"], remat=remat,
+                               final_norm=False)
     return lm_loss_sampled(cfg, params, hidden, rng, batch.get("mask"),
-                           impl=loss_impl)
+                           impl=loss_impl, pre_norm="rms")
 
 
 def logits_fn(cfg: ModelConfig, params, batch, **_):

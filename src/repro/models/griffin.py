@@ -176,7 +176,7 @@ def attn_block_apply(p, x, cfg: ModelConfig, positions, attn_impl="auto"):
 
 
 def forward_hidden(cfg: ModelConfig, params, tokens, *, attn_impl="auto",
-                   remat="none", last_only=False, **_):
+                   remat="none", last_only=False, final_norm=True, **_):
     """Trunk -> (final-norm hidden, aux); the loss paths skip the
     unembedding projection entirely (models/loss.py)."""
     B, S = tokens.shape
@@ -199,7 +199,8 @@ def forward_hidden(cfg: ModelConfig, params, tokens, *, attn_impl="auto",
         x, _ = jax.lax.scan(tail_body, x, params["tail"])
     if last_only:
         x = x[:, -1:]
-    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if final_norm:
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
     return x, jnp.zeros((), jnp.float32)
 
 
@@ -213,18 +214,20 @@ def forward(cfg: ModelConfig, params, tokens, *, attn_impl="auto",
 def loss_fn(cfg: ModelConfig, params, batch, *, remat="none",
             loss_impl=None, **_):
     from .loss import lm_loss
-    hidden, aux = forward_hidden(cfg, params, batch["tokens"], remat=remat)
+    hidden, aux = forward_hidden(cfg, params, batch["tokens"], remat=remat,
+                                 final_norm=False)
     ce, _ = lm_loss(cfg, params, hidden, batch["labels"],
-                    batch.get("mask"), impl=loss_impl)
+                    batch.get("mask"), impl=loss_impl, pre_norm="rms")
     return ce, {"ce": ce, "aux": aux}
 
 
 def sampled_loss_fn(cfg: ModelConfig, params, batch, rng, *, remat="none",
                     loss_impl=None, **_):
     from .loss import lm_loss_sampled
-    hidden, _ = forward_hidden(cfg, params, batch["tokens"], remat=remat)
+    hidden, _ = forward_hidden(cfg, params, batch["tokens"], remat=remat,
+                               final_norm=False)
     return lm_loss_sampled(cfg, params, hidden, rng, batch.get("mask"),
-                           impl=loss_impl)
+                           impl=loss_impl, pre_norm="rms")
 
 
 def logits_fn(cfg: ModelConfig, params, batch, **_):

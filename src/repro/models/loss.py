@@ -8,10 +8,18 @@ final-logit softcap in every implementation:
   fused     Pallas chunked-vocab kernel (kernels/fused_ce.py): lm_head
             weight tiles stream through VMEM, the [B*T, V] logits never
             touch HBM, and the sampled-label GNB draw happens inside the
-            same sweep (online chunked Gumbel-argmax).
+            same sweep (online chunked Gumbel-argmax).  Block sizes come
+            from the shape-keyed autotuner (kernels/autotune.py).  With
+            ``pre_norm`` the final-norm producer fuses into the sweep too
+            (the kernel reads pre-norm tiles, norms in VMEM — one less
+            (N, D) HBM round-trip).  The default.
+  fused_jvp the fused kernel's ``custom_jvp`` twin (Pallas primal, linear
+            chunked-jnp tangent): the ONLY fused path that composes under
+            ``jax.jvp(jax.grad(.))`` — the Hutchinson estimator's HVP —
+            because a custom_vjp cannot be forward-differentiated.
   chunked   pure-jnp vocab-chunk scan with a checkpointed body — the
             compiled logits-free reference (backward recomputes each chunk
-            instead of saving [N, V] residuals).  The default.
+            instead of saving [N, V] residuals).
   unfused   the legacy materialized-logits path (unembed + cross_entropy /
             jax.random.categorical) — the memory-hungry oracle the
             benchmarks compare against.
@@ -25,14 +33,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..kernels.fused_ce import (fused_lm_loss, fused_lm_loss_sampled,
-                                online_argmax_step, online_lse_step,
-                                rowscale, vocab_chunk)
+from ..kernels.fused_ce import (fused_lm_loss, fused_lm_loss_jvp,
+                                fused_lm_loss_sampled, online_argmax_step,
+                                online_lse_step, rowscale, vocab_chunk)
 from .common import ModelConfig
-from .layers import NEG_INF_LOGIT, cross_entropy, unembed
+from .layers import (NEG_INF_LOGIT, cross_entropy, layer_norm, rms_norm,
+                     unembed)
 
 _LM_LOSS_IMPL = {"impl": "chunked"}
-_IMPLS = ("fused", "chunked", "unfused")
+_IMPLS = ("fused", "fused_jvp", "chunked", "unfused")
 _CHUNK = 2048  # vocab columns per jnp chunk (multiple of 128)
 
 
@@ -53,6 +62,26 @@ def unembed_weights(cfg: ModelConfig, params):
     if cfg.tie_embeddings:
         return emb["tok"], False
     return emb["unembed"], True
+
+
+def _norm_args(cfg: ModelConfig, params, pre_norm):
+    """Kernel kwargs for the fused final-norm producer: the family's
+    ``params["final_norm"]`` in the packed scale/bias convention."""
+    p = params["final_norm"]
+    return dict(norm_kind=pre_norm, norm_scale=p["scale"],
+                norm_bias=p.get("bias"), norm_eps=cfg.norm_eps)
+
+
+def _apply_final_norm(cfg: ModelConfig, params, hidden, pre_norm):
+    """The jnp final norm for the non-kernel impls (identical math to the
+    in-kernel producer — models.layers formulas)."""
+    if pre_norm is None:
+        return hidden
+    p = params["final_norm"]
+    if pre_norm == "ln":
+        return layer_norm(hidden, p["scale"], p["bias"], cfg.norm_eps)
+    assert pre_norm == "rms", pre_norm
+    return rms_norm(hidden, p["scale"], cfg.norm_eps)
 
 
 def _rowscale(hidden, mask):
@@ -117,29 +146,39 @@ def _chunked_sweep(cfg: ModelConfig, hidden, w, transpose_w, labels=None,
 
 
 def lm_loss(cfg: ModelConfig, params, hidden, labels, mask=None, *,
-            impl=None):
-    """Masked-mean LM cross-entropy from final-norm hidden states.
+            impl=None, pre_norm=None):
+    """Masked-mean LM cross-entropy from final hidden states.
 
     Returns ``(ce, n_valid)``; ``n_valid`` is the valid-position count (the
-    GNB batch factor B).  ``impl`` overrides the module default."""
+    GNB batch factor B).  ``impl`` overrides the module default.  With
+    ``pre_norm`` ("rms" | "ln"), ``hidden`` is PRE-final-norm and the norm
+    (``params["final_norm"]``) is applied here — fused into the kernel
+    sweep for the fused impl, in jnp for the rest."""
     impl = impl or _LM_LOSS_IMPL["impl"]
     assert impl in _IMPLS, impl
+    if impl == "fused":
+        w, tw = unembed_weights(cfg, params)
+        kw = _norm_args(cfg, params, pre_norm) if pre_norm else {}
+        return fused_lm_loss(hidden, w, labels, mask,
+                             vocab_size=cfg.vocab_size, transpose_w=tw,
+                             softcap=cfg.final_logit_softcap, **kw)
+    hidden = _apply_final_norm(cfg, params, hidden, pre_norm)
     if impl == "unfused":
         logits = unembed(params["embed"], hidden, cfg)
         _, n_valid = _rowscale(hidden, mask)
         return cross_entropy(logits, labels, mask), n_valid
     w, tw = unembed_weights(cfg, params)
-    if impl == "fused":
-        return fused_lm_loss(hidden, w, labels, mask,
-                             vocab_size=cfg.vocab_size, transpose_w=tw,
-                             softcap=cfg.final_logit_softcap)
+    if impl == "fused_jvp":
+        return fused_lm_loss_jvp(hidden, w, labels, mask,
+                                 vocab_size=cfg.vocab_size, transpose_w=tw,
+                                 softcap=cfg.final_logit_softcap)
     lse, ll, _ = _chunked_sweep(cfg, hidden, w, tw, labels=labels)
     rs, n_valid = _rowscale(hidden, mask)
     return jnp.sum(rs * (lse - ll)), n_valid
 
 
 def lm_loss_sampled(cfg: ModelConfig, params, hidden, rng, mask=None, *,
-                    impl=None):
+                    impl=None, pre_norm=None):
     """GNB sampled-label CE (Algorithm 2 lines 3-5) from hidden states:
     draws ``yhat ~ softmax(logits)`` and returns the masked-mean NLL
     against it as ``(nll, n_valid)`` — differentiate this for ``ghat``.
@@ -149,12 +188,16 @@ def lm_loss_sampled(cfg: ModelConfig, params, hidden, rng, mask=None, *,
     (categorical + log_softmax) path, kept as the oracle."""
     impl = impl or _LM_LOSS_IMPL["impl"]
     assert impl in _IMPLS, impl
+    if impl == "fused_jvp":     # sampling has no HVP path; same kernels
+        impl = "fused"
     w, tw = unembed_weights(cfg, params)
     if impl == "fused":
+        kw = _norm_args(cfg, params, pre_norm) if pre_norm else {}
         return fused_lm_loss_sampled(hidden, w, rng, mask,
                                      vocab_size=cfg.vocab_size,
                                      transpose_w=tw,
-                                     softcap=cfg.final_logit_softcap)
+                                     softcap=cfg.final_logit_softcap, **kw)
+    hidden = _apply_final_norm(cfg, params, hidden, pre_norm)
     if impl == "unfused":
         logits = unembed(params["embed"], hidden, cfg)
         yhat = jax.random.categorical(rng, jax.lax.stop_gradient(logits),

@@ -225,7 +225,8 @@ def init_state(cfg: ModelConfig, batch_size: int) -> dict:
 
 
 def forward_hidden(cfg: ModelConfig, params, tokens, *, state=None,
-                   remat="none", chunked=True, last_only=False, **_):
+                   remat="none", chunked=True, last_only=False,
+                   final_norm=True, **_):
     """Trunk -> (final-norm hidden, aux, new_state); the loss paths skip
     the unembedding projection entirely (models/loss.py)."""
     B, S = tokens.shape
@@ -250,7 +251,8 @@ def forward_hidden(cfg: ModelConfig, params, tokens, *, state=None,
     x, new_state = jax.lax.scan(body, x, (params["layers"], state))
     if last_only:
         x = x[:, -1:]
-    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if final_norm:
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
     return x, jnp.zeros((), jnp.float32), new_state
 
 
@@ -266,18 +268,19 @@ def loss_fn(cfg: ModelConfig, params, batch, *, remat="none",
             loss_impl=None, **_):
     from .loss import lm_loss
     hidden, aux, _ = forward_hidden(cfg, params, batch["tokens"],
-                                    remat=remat)
+                                    remat=remat, final_norm=False)
     ce, _ = lm_loss(cfg, params, hidden, batch["labels"],
-                    batch.get("mask"), impl=loss_impl)
+                    batch.get("mask"), impl=loss_impl, pre_norm="rms")
     return ce, {"ce": ce, "aux": aux}
 
 
 def sampled_loss_fn(cfg: ModelConfig, params, batch, rng, *, remat="none",
                     loss_impl=None, **_):
     from .loss import lm_loss_sampled
-    hidden, _, _ = forward_hidden(cfg, params, batch["tokens"], remat=remat)
+    hidden, _, _ = forward_hidden(cfg, params, batch["tokens"], remat=remat,
+                                  final_norm=False)
     return lm_loss_sampled(cfg, params, hidden, rng, batch.get("mask"),
-                           impl=loss_impl)
+                           impl=loss_impl, pre_norm="rms")
 
 
 def logits_fn(cfg: ModelConfig, params, batch, **_):

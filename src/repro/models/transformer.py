@@ -181,11 +181,14 @@ def _embed_inputs(cfg, params, tokens, positions, patch_embeds):
 
 def forward_hidden(cfg: ModelConfig, params, tokens, *, positions=None,
                    patch_embeds=None, attn_impl: str = "auto",
-                   remat: str = "none"):
+                   remat: str = "none", final_norm: bool = True):
     """tokens (B, S) -> (final-norm hidden (B, S, D), aux).  The trunk
     shared by :func:`forward` and the logits-free loss paths — the
     unembedding projection happens inside ``models.loss.lm_loss`` (or not
-    at all, for the fused kernel)."""
+    at all, for the fused kernel).  ``final_norm=False`` returns the
+    PRE-norm hidden so ``lm_loss(..., pre_norm=cfg.norm_type)`` can fuse
+    the norm producer into the loss sweep (one less (B, S, D) HBM
+    round-trip)."""
     x, positions = _embed_inputs(cfg, params, tokens, positions, patch_embeds)
     windows = layer_windows(cfg, tokens.shape[1])
     scales = layer_scales(cfg)
@@ -236,7 +239,8 @@ def forward_hidden(cfg: ModelConfig, params, tokens, *, positions=None,
     else:
         (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
                                    (params["layers"], windows, scales))
-    x = _norm(params["final_norm"], x, cfg)
+    if final_norm:
+        x = _norm(params["final_norm"], x, cfg)
     return x, aux
 
 
@@ -261,9 +265,11 @@ def loss_fn(cfg: ModelConfig, params, batch, *, attn_impl="auto",
     hidden, aux = forward_hidden(cfg, params, batch["tokens"],
                                  patch_embeds=batch.get("patch_embeds"),
                                  positions=batch.get("positions"),
-                                 attn_impl=attn_impl, remat=remat)
+                                 attn_impl=attn_impl, remat=remat,
+                                 final_norm=False)
     ce, _ = lm_loss(cfg, params, hidden, batch["labels"],
-                    batch.get("mask"), impl=loss_impl)
+                    batch.get("mask"), impl=loss_impl,
+                    pre_norm=cfg.norm_type)
     return ce + aux, {"ce": ce, "aux": aux}
 
 
@@ -275,9 +281,10 @@ def sampled_loss_fn(cfg: ModelConfig, params, batch, rng, *,
     hidden, _ = forward_hidden(cfg, params, batch["tokens"],
                                patch_embeds=batch.get("patch_embeds"),
                                positions=batch.get("positions"),
-                               attn_impl=attn_impl, remat=remat)
+                               attn_impl=attn_impl, remat=remat,
+                               final_norm=False)
     return lm_loss_sampled(cfg, params, hidden, rng, batch.get("mask"),
-                           impl=loss_impl)
+                           impl=loss_impl, pre_norm=cfg.norm_type)
 
 
 def logits_fn(cfg: ModelConfig, params, batch, **kw):

@@ -30,16 +30,19 @@ LR schedule is evaluated once per step and handed to the engine as a
 traced scalar; the GNB batch factor B stays a traced scalar too.
 
 The hot-path LM loss is logits-free: ``loss_fn`` routes the trunk's
-final-norm hidden states through ``models.loss.lm_loss`` (chunked-vocab
-sweep by default; the Pallas fused kernel with ``fused_loss=True``), so
-the ``[B*T, V]`` logits tensor never materializes on ordinary steps.  The
-GNB refresh branch is logits-free only with ``fused_loss=True``, where
+*pre-norm* hidden states through ``models.loss.lm_loss`` (the Pallas
+fused kernel by default — autotuned block sizes, the final norm applied
+in VMEM inside the sweep; ``fused_loss=False`` falls back to the chunked
+jnp sweep), so the ``[B*T, V]`` logits tensor never materializes on
+ordinary steps.  The GNB refresh branch is logits-free too by default:
 ``yhat ~ softmax(logits)`` is drawn *inside* the kernel's vocab sweep
 (``sampled_loss_fn`` -> ``gnb_ghat_flat_from_loss``) and B = the sweep's
-valid-position count folds into the fused Hessian-EMA as a traced scalar;
-the default refresh still materializes the estimator *sub-batch*'s logits
-once via ``logits_fn`` (its single chunked sweep eliminates the second
-fp32 ``log_softmax`` copy, not the buffer itself).
+valid-position count folds into the fused Hessian-EMA as a traced
+scalar; the chunked fallback's refresh materializes the estimator
+*sub-batch*'s logits once via ``logits_fn`` (its single chunked sweep
+eliminates the second fp32 ``log_softmax`` copy, not the buffer itself).
+The Hutchinson refresh crosses the fused loss through its ``custom_jvp``
+twin, so the HVP no longer falls back to the chunked path.
 """
 from __future__ import annotations
 
@@ -95,8 +98,9 @@ class TrainerConfig:
     remat: str = "none"                # none | full | dots
     attn_impl: str = "auto"
     fused_kernel: bool = False         # Pallas backend for the engine
-    fused_loss: bool = False           # Pallas logits-free LM loss + GNB
-    #                                    (kernels/fused_ce.py); default is
+    fused_loss: bool = True            # Pallas logits-free LM loss + GNB
+    #                                    (kernels/fused_ce.py, autotuned
+    #                                    block sizes); False falls back to
     #                                    the chunked jnp sweep — both keep
     #                                    the [B*T, V] logits out of HBM
     compress_grads: bool = False       # int8 + error feedback (beyond-paper)
@@ -247,13 +251,15 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
             g_sh = compress(g_sh, crng)
             return tuple(g * g for g in g_sh), scale
         if tc.estimator == "hutchinson":
-            # forward-over-reverse HVP can't cross the fused loss's
-            # custom_vjp (no JVP rule) — the estimator sub-batch always
-            # uses the chunked jnp loss, which supports both modes
+            # forward-over-reverse HVP crosses the fused loss through its
+            # custom_jvp twin ("fused_jvp": same Pallas forward, linear
+            # tangent swept chunk-by-chunk — kernels/fused_ce.py); without
+            # fused_loss the chunked jnp loss supports both modes natively
+            hvp_impl = "fused_jvp" if tc.fused_loss else "chunked"
             def sf(p):
                 return model.loss_fn(cfg, p, sub, remat=tc.remat,
                                      attn_impl=tc.attn_impl,
-                                     loss_impl="chunked")[0]
+                                     loss_impl=hvp_impl)[0]
             est = hutchinson_estimator_flat(sf, params, rng, lay)
             return compress(est, crng), 1.0
         if tc.estimator == "empirical_fisher":

@@ -1,0 +1,251 @@
+"""The fused-CE block autotuner (kernels/autotune.py) + the fused JVP rule.
+
+Fast-tier policy: every test here runs the tuner in roofline-only mode
+(``measure=False`` — deterministic, no wall-clock timing, no disk writes);
+the single measured-persistence test is marked ``slow``.  Covers the
+ISSUE-6 satellite contracts:
+
+  * cache determinism — same key -> same config, and the tuned fused loss
+    is bit-identical across independent tuner runs;
+  * parity vs the kernels/ref.py closed-form oracles at tuned (bn, bv)
+    configs that cross chunk boundaries, both backward schedules;
+  * fused-JVP vs chunked-HVP equivalence <= 3e-6, and the trainer's
+    Hutchinson refresh actually traces through the fused JVP rule (no
+    silent chunked fallback — KERNEL_CALLS counter);
+  * interpret-mode clamps (``_pick_bv`` / candidate caps) so CPU CI never
+    unrolls a pathological interpreter grid;
+  * residency cap — no candidate can reconstruct the [N, Vp] logits
+    buffer the memory audit forbids.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune
+from repro.kernels.autotune import (TunedCE, cache_key, candidate_blocks,
+                                    clear_memory_cache, get_tuned,
+                                    predict_seconds, residency_cap)
+from repro.kernels.fused_ce import (_pick_bv, fused_lm_loss,
+                                    fused_lm_loss_jvp, kernel_calls,
+                                    reset_kernel_calls)
+from repro.kernels.ref import lm_loss_grads_ref, lm_loss_ref
+
+N, D, VOCAB, VP = 64, 32, 200, 256
+TOL = 3e-6
+
+
+@pytest.fixture(autouse=True)
+def _fresh_tuner(monkeypatch, tmp_path):
+    """Every test gets an empty in-memory cache and a throwaway disk path
+    (never the user's ~/.cache)."""
+    monkeypatch.setenv("REPRO_FUSED_CE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    clear_memory_cache()
+    yield
+    clear_memory_cache()
+
+
+def _data(n=N, d=D, vp=VP, transpose_w=False, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    h = jax.random.normal(ks[0], (n, d), jnp.float32) * 0.5
+    wshape = (d, vp) if transpose_w else (vp, d)
+    w = jax.random.normal(ks[1], wshape, jnp.float32) * 0.5
+    labels = jax.random.randint(ks[2], (n,), 0, VOCAB)
+    return h, w, labels
+
+
+# ---------------------------------------------------------------------------
+# cache determinism + hermeticity
+
+
+def test_same_key_same_config():
+    kw = dict(dtype="float32", transpose_w=False, softcap=None, norm=None,
+              interpret=True)
+    a = get_tuned(N, D, VP, **kw)
+    clear_memory_cache()
+    b = get_tuned(N, D, VP, **kw)
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+    assert a.source == "roofline"
+    # and the in-memory hit is the exact same decision
+    assert get_tuned(N, D, VP, **kw) == b
+
+
+def test_tuned_loss_bit_identical_across_tuner_runs():
+    """Two independent tuner resolutions (cache cleared between) must
+    produce bit-identical losses — the tuner is part of the numerics
+    contract, not just a performance hint."""
+    h, w, labels = _data()
+
+    def run():
+        f = jax.jit(lambda h, w: fused_lm_loss(
+            h, w, labels, vocab_size=VOCAB)[0])
+        return np.asarray(f(h, w))
+
+    a = run()
+    clear_memory_cache()
+    jax.clear_caches()
+    b = run()
+    assert a.tobytes() == b.tobytes()
+
+
+def test_roofline_only_mode_touches_no_disk(tmp_path):
+    path = os.environ["REPRO_FUSED_CE_CACHE"]
+    for vp in (VP, 2 * VP):
+        get_tuned(N, D, vp, dtype="float32", transpose_w=False,
+                  softcap=None, norm=None, interpret=True)
+    assert not os.path.exists(path)
+
+
+@pytest.mark.slow
+def test_measured_entry_persists_and_reloads():
+    t = autotune.tune_shape(N, D, VP, interpret=True)
+    assert t.source == "measured" and t.measured_ms is not None
+    assert os.path.exists(os.environ["REPRO_FUSED_CE_CACHE"])
+    clear_memory_cache()       # force the disk round-trip
+    t2 = get_tuned(N, D, VP, dtype="float32", transpose_w=False,
+                   softcap=None, norm=None, interpret=True)
+    assert t2 == t
+
+
+def test_cache_key_separates_backends_and_layouts():
+    keys = {cache_key(N, D, VP, dtype="float32", transpose_w=tw,
+                      softcap=sc, norm=nm, backend=be)
+            for tw in (False, True) for sc in (None, 30.0)
+            for nm in (None, "rms", "ln") for be in ("tpu", "interpret")}
+    assert len(keys) == 2 * 2 * 3 * 2
+
+
+# ---------------------------------------------------------------------------
+# candidate legality
+
+
+def test_candidates_respect_residency_cap():
+    for interpret in (False, True):
+        cands = candidate_blocks(1024, 256, 32768, bytes_h=2,
+                                 interpret=interpret)
+        assert cands
+        cap = residency_cap(1024, 32768)
+        for bn, bv, schedule in cands:
+            assert 1024 % bn == 0 and 32768 % bv == 0
+            assert bn * bv <= cap
+            if schedule == "fused":
+                assert 1024 // bn == 1 or 32768 // bv == 1
+
+
+def test_predict_prefers_fewer_cells_in_interpret():
+    """The interpret cost model must rank a single-row-block tiling above
+    a many-cell one of equal arithmetic — per-cell dispatch dominates."""
+    few = predict_seconds(256, 64, 4096, 256, 4096, "fused", bytes_h=4,
+                          bytes_w=4, interpret=True)
+    many = predict_seconds(256, 64, 4096, 8, 128, "split", bytes_h=4,
+                           bytes_w=4, interpret=True)
+    assert few < many
+
+
+def test_pick_bv_interpret_clamp():
+    # an explicit tiny chunk at a big vocab would unroll 256 interpreter
+    # cells per row block; the clamp caps the vocab grid at 64
+    assert _pick_bv(32768, 128, interpret=True) >= 32768 // 64
+    # ... but passes through where the grid is already small
+    assert _pick_bv(1024, 128, interpret=True) == 128
+    # and never clamps for a real backend
+    assert _pick_bv(32768, 128, interpret=False) == 128
+
+
+def test_autotuned_defaults_keep_interpret_grid_small():
+    t = get_tuned(256, 64, 32768, dtype="float32", transpose_w=False,
+                  softcap=None, norm=None, interpret=True)
+    assert (256 // t.bn) * (32768 // t.bv) <= 64
+
+
+# ---------------------------------------------------------------------------
+# parity at tuned configs (vs the closed-form oracles in kernels/ref.py)
+
+
+def _three_tuned_configs():
+    """Three tuner-legal (bn, bv, schedule) configs crossing chunk
+    boundaries: a multi-cell split grid, a fused row-grid (n_v == 1), and
+    a fused vocab-grid (n_r == 1)."""
+    cands = candidate_blocks(N, D, VP, bytes_h=4, interpret=True)
+    split = next(c for c in cands
+                 if c[2] == "split" and N // c[0] > 1 and VP // c[1] > 1)
+    fused_rows = next(c for c in cands if c[2] == "fused" and VP // c[1] == 1
+                      and N // c[0] > 1)
+    fused_cols = next(c for c in cands if c[2] == "fused" and N // c[0] == 1
+                      and VP // c[1] > 1)
+    return [split, fused_rows, fused_cols]
+
+
+@pytest.mark.parametrize("transpose_w", [False, True])
+def test_parity_at_tuned_configs(transpose_w):
+    h, w, labels = _data(transpose_w=transpose_w)
+    ref_l, ref_dh, ref_dw = lm_loss_grads_ref(
+        h, w, labels, vocab_size=VOCAB, transpose_w=transpose_w)
+    for bn, bv, schedule in _three_tuned_configs():
+        f = jax.jit(lambda h, w: fused_lm_loss(
+            h, w, labels, vocab_size=VOCAB, transpose_w=transpose_w,
+            block_n=bn, block_v=bv, schedule=schedule)[0])
+        loss, (dh, dw) = jax.value_and_grad(f, argnums=(0, 1))(h, w)
+        tag = f"bn={bn} bv={bv} {schedule}"
+        np.testing.assert_allclose(np.asarray(loss), np.asarray(ref_l),
+                                   rtol=TOL, atol=TOL, err_msg=tag)
+        np.testing.assert_allclose(np.asarray(dh), np.asarray(ref_dh),
+                                   rtol=TOL, atol=TOL, err_msg=tag)
+        np.testing.assert_allclose(np.asarray(dw), np.asarray(ref_dw),
+                                   rtol=TOL, atol=TOL, err_msg=tag)
+
+
+# ---------------------------------------------------------------------------
+# the fused JVP rule (Hutchinson's HVP path)
+
+
+@pytest.mark.parametrize("transpose_w", [False, True])
+def test_fused_jvp_matches_chunked_hvp(transpose_w):
+    """H·u through the fused custom_jvp twin == H·u through the
+    materialized-logits oracle, <= 3e-6 (forward-over-reverse both)."""
+    h, w, labels = _data(transpose_w=transpose_w)
+    u = jax.random.normal(jax.random.PRNGKey(9), h.shape, jnp.float32)
+
+    def loss_fused(h):
+        return fused_lm_loss_jvp(h, w, labels, vocab_size=VOCAB,
+                                 transpose_w=transpose_w)[0]
+
+    def loss_ref(h):
+        return lm_loss_ref(h, w, labels, vocab_size=VOCAB,
+                           transpose_w=transpose_w)
+
+    g_f, hvp_f = jax.jvp(jax.grad(loss_fused), (h,), (u,))
+    g_r, hvp_r = jax.jvp(jax.grad(loss_ref), (h,), (u,))
+    np.testing.assert_allclose(np.asarray(g_f), np.asarray(g_r),
+                               rtol=TOL, atol=TOL)
+    np.testing.assert_allclose(np.asarray(hvp_f), np.asarray(hvp_r),
+                               rtol=1e-5, atol=TOL)
+
+
+def test_hutchinson_traces_through_fused_jvp_rule():
+    """The trainer's Hutchinson refresh with ``fused_loss=True`` (the
+    default) must enter the fused JVP rule — and never the plain fused
+    forward, which would mean the custom_vjp path (no HVP) or a silent
+    chunked fallback."""
+    from repro.configs.gpt2 import GPT2_TINY
+    from repro.data import DataConfig, make_source
+    from repro.train import TrainerConfig, make_train_fns
+
+    tc = TrainerConfig(optimizer="sophia_h", estimator="hutchinson",
+                       total_steps=4, warmup_steps=1, hess_interval=1,
+                       hess_subbatch=2, seed=0)
+    assert tc.fused_loss, "fused_loss must default to True (ISSUE 6)"
+    init_fn, train_step = make_train_fns(GPT2_TINY, tc)
+    state = init_fn(jax.random.PRNGKey(0))
+    src = make_source(DataConfig(seq_len=16, global_batch=2,
+                                 vocab_size=GPT2_TINY.vocab_size, seed=0))
+    batch = {k: jnp.asarray(v) for k, v in src.batch_at(0).items()}
+    reset_kernel_calls()
+    state, _ = jax.jit(train_step)(state, batch, jnp.asarray(True))
+    calls = kernel_calls()
+    assert calls.get("jvp_rule", 0) >= 1, calls
+    jax.block_until_ready(state)

@@ -237,6 +237,65 @@ def test_chunked_sampled_stats_lse_and_grad():
                                atol=1e-6)
 
 
+@pytest.mark.parametrize("norm", ["rms", "ln"])
+@pytest.mark.parametrize("tied", [True, False])
+def test_norm_producer_fusion_matches_jnp_norm(norm, tied):
+    """The in-kernel final-norm producer == jnp norm then kernel, for loss
+    AND grads (hidden, W, norm scale/bias) — the (N, D) round-trip the
+    fusion eliminates must not change a single ulp beyond fp tolerance."""
+    from repro.models.layers import layer_norm, rms_norm
+
+    hidden, w, labels, mask = _setup(jnp.float32, tied)
+    tw = not tied
+    D = hidden.shape[-1]
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    scale = jax.random.normal(ks[0], (D,), jnp.float32) * 0.1
+    bias = jax.random.normal(ks[1], (D,), jnp.float32) * 0.1
+
+    def fused_norm(h, w_, sc, bi):
+        return fused_lm_loss(h, w_, labels, mask, vocab_size=VOCAB,
+                             transpose_w=tw, block_n=16, block_v=64,
+                             norm_kind=norm, norm_scale=sc,
+                             norm_bias=bi if norm == "ln" else None)[0]
+
+    def jnp_then_kernel(h, w_, sc, bi):
+        hn = (layer_norm(h, sc, bi, 1e-6) if norm == "ln"
+              else rms_norm(h, sc, 1e-6))
+        return fused_lm_loss(hn, w_, labels, mask, vocab_size=VOCAB,
+                             transpose_w=tw, block_n=16, block_v=64)[0]
+
+    args = (hidden, w, scale, bias)
+    la, ga = jax.value_and_grad(fused_norm, argnums=(0, 1, 2, 3))(*args)
+    lb, gb = jax.value_and_grad(jnp_then_kernel, argnums=(0, 1, 2, 3))(*args)
+    np.testing.assert_allclose(float(la), float(lb), atol=TOL)
+    for x, y, name in zip(ga, gb, ("dh", "dw", "dscale", "dbias")):
+        if norm == "rms" and name == "dbias":
+            continue  # rms has no bias; the fused arg gets zero cotangent
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5,
+                                   err_msg=name)
+
+
+@pytest.mark.parametrize("tied", [True, False])
+def test_backward_schedules_agree(tied):
+    """The combined revisit-free backward ("fused" schedule, legal at
+    single-axis grids) == the two-sweep "split" backward at the same
+    tiling."""
+    hidden, w, labels, mask = _setup(jnp.float32, tied)
+    tw = not tied
+
+    def f(sched):
+        def loss(h, w_):
+            return fused_lm_loss(h, w_, labels, mask, vocab_size=VOCAB,
+                                 transpose_w=tw, block_n=16, block_v=256,
+                                 schedule=sched)[0]
+        return jax.value_and_grad(loss, argnums=(0, 1))(hidden, w)
+
+    (lf, (dhf, dwf)), (ls, (dhs, dws)) = f("fused"), f("split")
+    np.testing.assert_allclose(float(lf), float(ls), atol=TOL)
+    np.testing.assert_allclose(np.asarray(dhf), np.asarray(dhs), atol=TOL)
+    np.testing.assert_allclose(np.asarray(dwf), np.asarray(dws), atol=TOL)
+
+
 @pytest.mark.parametrize("family", ["dense", "rwkv"])
 def test_model_loss_impls_agree(family):
     """fused == chunked == unfused (to fp tolerance) through a real model
