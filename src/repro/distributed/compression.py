@@ -45,9 +45,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-PyTree = Any
+# The quantization core lives in repro.quant (shared with the serving KV
+# cache); the underscore names are re-exported here because this module is
+# their historical home (tests and experiments import them from here).
+from ..quant import _GOLDEN, _as_seed, _quantize, _uniform_noise
 
-_GOLDEN = 0x9E3779B9  # 2^32 / golden ratio; per-shard seed decorrelation
+__all__ = ["CompressionState", "FlatCompressionState", "GradCompressor",
+           "compressed_bytes", "_as_seed", "_quantize", "_uniform_noise"]
+
+PyTree = Any
 
 
 class CompressionState(NamedTuple):
@@ -59,67 +65,6 @@ class FlatCompressionState(NamedTuple):
     buffer per shard, same (padded) length, sharded over the fsdp axis."""
 
     error: Tuple[jnp.ndarray, ...]
-
-
-# ---------------------------------------------------------------------------
-# quantization core
-
-
-def _as_seed(rng):
-    """Normalize an rng (PRNGKey, typed key, or int scalar) to uint32."""
-    if rng is None:
-        return None
-    if not isinstance(rng, jax.Array):
-        rng = jnp.asarray(rng)
-    if rng.ndim == 0 and jnp.issubdtype(rng.dtype, jnp.integer):
-        return rng.astype(jnp.uint32)
-    return jax.random.randint(rng, (), 0,
-                              jnp.iinfo(jnp.int32).max).astype(jnp.uint32)
-
-
-def _uniform_noise(seed, idx):
-    """Counter-based uniform noise in [-0.5, 0.5).
-
-    A pure function of (seed, global element index) — murmur3-style integer
-    finalizer — so the same element rounds the same way regardless of how
-    the shard is segmented across devices.  jax.random.uniform keyed per
-    device would break 1-vs-N-device trajectory parity.
-    """
-    x = idx.astype(jnp.uint32) * jnp.uint32(2654435761) + seed
-    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
-    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
-    x = x ^ (x >> 16)
-    return x.astype(jnp.float32) * jnp.float32(2.0 ** -32) - jnp.float32(0.5)
-
-
-def _quantize(x, block: int, rng=None, *, offset=0):
-    """int8 block quantization with per-block fp32 scales.
-
-    ``rng`` None selects round-to-nearest (|deq - x| <= scale/2, and the
-    fp32 residual ``x - deq`` is *exact* by Sterbenz); otherwise stochastic
-    rounding driven by ``_uniform_noise`` (|deq - x| <= scale, unbiased in
-    expectation).  ``offset`` is the global element index of ``x[0]`` within
-    its flat shard — it keys the noise, not the math, so segmenting a shard
-    changes nothing as long as segments stay block-aligned.
-
-    Returns (q int8 [nblocks, block], scales fp32 [nblocks, 1], deq fp32
-    shaped like x)."""
-    flat = x.reshape(-1)
-    pad = (-flat.size) % block
-    if pad:  # engine shards are block multiples: keep their HLO pad-free
-        flat = jnp.pad(flat, (0, pad))
-    blocks = flat.reshape(-1, block)
-    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
-    scaled = blocks / scale
-    seed = _as_seed(rng)
-    if seed is not None:
-        idx = (jnp.asarray(offset, jnp.uint32)
-               + jnp.arange(flat.size, dtype=jnp.uint32)).reshape(-1, block)
-        scaled = scaled + _uniform_noise(seed, idx)
-    q = jnp.clip(jnp.round(scaled), -127, 127).astype(jnp.int8)
-    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:x.size].reshape(x.shape)
-    return q, scale, deq
 
 
 # ---------------------------------------------------------------------------

@@ -46,7 +46,7 @@ NEG_INF = -1e30
 
 def _decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref, m_scr,
                    l_scr, acc_scr, *, scale, page_len, cache_len, n_pages,
-                   softcap):
+                   softcap, ks_ref=None, vs_ref=None, kv_cast=None):
     n = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -59,7 +59,16 @@ def _decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref, m_scr,
     pos = pos_ref[n]
     win = win_ref[0]
     q = q_ref[0, 0].astype(jnp.float32)                  # (hd,)
-    k = k_ref[0, :, 0].astype(jnp.float32)               # (page_len, hd)
+    k = k_ref[0, :, 0]                                   # (page_len, hd)
+    v = v_ref[0, :, 0]
+    if ks_ref is not None:
+        # int8 page dequant: fp32 payload * per-token scale, rounded once
+        # into the compute dtype — bit-identical to the XLA read path
+        # (models/layers._dequant_cache), so kernel on/off never changes
+        # sampled tokens
+        k = (k.astype(jnp.float32) * ks_ref[0][:, None]).astype(kv_cast)
+        v = (v.astype(jnp.float32) * vs_ref[0][:, None]).astype(kv_cast)
+    k = k.astype(jnp.float32)
     s = (q[None, :] @ k.T) * scale                       # (1, page_len)
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
@@ -75,7 +84,7 @@ def _decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref, m_scr,
     alpha = jnp.exp(m_prev - m_new)
     p = jnp.exp(s - m_new)
     l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
-    acc_scr[...] = acc_scr[...] * alpha + p @ v_ref[0, :, 0].astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + p @ v.astype(jnp.float32)
     m_scr[...] = m_new
 
     @pl.when(j == n_pages - 1)
@@ -84,13 +93,22 @@ def _decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref, m_scr,
                        / jnp.maximum(l_scr[...][0], 1e-30)).astype(o_ref.dtype)
 
 
+def _decode_kernel_q8(pos_ref, win_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                      o_ref, m_scr, l_scr, acc_scr, **kw):
+    """Operand-order shim: the quantized call streams two extra per-page
+    scale planes between the caches and the output."""
+    _decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref, m_scr,
+                   l_scr, acc_scr, ks_ref=ks_ref, vs_ref=vs_ref, **kw)
+
+
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
 def decode_attention_pallas(q, k_cache, v_cache, positions, *, scale=None,
                             window=None, softcap=None,
-                            page_len=DEFAULT_PAGE, interpret=None):
+                            page_len=DEFAULT_PAGE, interpret=None,
+                            k_scale=None, v_scale=None):
     """q (N, H, hd); k/v (N, C, Hkv, hd); positions (N,) -> (N, H, hd).
 
     One grid step per (slot, head, page); HBM traffic = K + V pages once
@@ -98,6 +116,12 @@ def decode_attention_pallas(q, k_cache, v_cache, positions, *, scale=None,
     scalar (it rides in as a scalar-prefetch operand, so per-layer sliding
     windows scan cleanly); None means global attention.  ``interpret``
     defaults to interpreter mode off-TPU, native compilation on TPU.
+
+    int8 caches pass ``k_scale``/``v_scale`` (N, C) fp32 per-token scales:
+    each page's scale slice streams into VMEM alongside its K/V page
+    (same index map on the ring axis) and the page is dequantized in
+    registers — HBM reads the 1-byte payloads, halving cache traffic and
+    doubling the slots a fixed HBM budget sustains.
     """
     interpret = _interpret_default() if interpret is None else interpret
     N, H, hd = q.shape
@@ -112,19 +136,30 @@ def decode_attention_pallas(q, k_cache, v_cache, positions, *, scale=None,
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
     win = jnp.reshape(jnp.asarray(
         (1 << 30) if window is None else window, jnp.int32), (1,))
+    quant = k_scale is not None
 
-    kern = functools.partial(_decode_kernel, scale=scale, page_len=page_len,
-                             cache_len=C, n_pages=n_pages, softcap=softcap)
+    kern = functools.partial(
+        _decode_kernel_q8 if quant else _decode_kernel, scale=scale,
+        page_len=page_len, cache_len=C, n_pages=n_pages, softcap=softcap)
+    if quant:
+        kern = functools.partial(kern, kv_cast=q.dtype)
+    kv_spec = pl.BlockSpec((1, page_len, 1, hd),
+                           lambda n, h, j, pos, w: (n, j, h // G, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, hd), lambda n, h, j, pos, w: (n, h, 0)),
+        kv_spec,
+        kv_spec,
+    ]
+    operands = [q, k_cache, v_cache]
+    if quant:
+        scale_spec = pl.BlockSpec((1, page_len),
+                                  lambda n, h, j, pos, w: (n, j))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(N, H, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, hd), lambda n, h, j, pos, w: (n, h, 0)),
-            pl.BlockSpec((1, page_len, 1, hd),
-                         lambda n, h, j, pos, w: (n, j, h // G, 0)),
-            pl.BlockSpec((1, page_len, 1, hd),
-                         lambda n, h, j, pos, w: (n, j, h // G, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, hd), lambda n, h, j, pos, w: (n, h, 0)),
         scratch_shapes=[
             pltpu.VMEM((1, 1), jnp.float32),    # running max
@@ -137,11 +172,19 @@ def decode_attention_pallas(q, k_cache, v_cache, positions, *, scale=None,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(positions.astype(jnp.int32), win, q, k_cache, v_cache)
+    )(positions.astype(jnp.int32), win, *operands)
 
 
-def decode_attention_hbm_bytes(N, H, Hkv, C, hd, bytes_per_el=2) -> int:
-    """Analytic HBM floor of the fused decode step (roofline overlay)."""
-    q_o = 2 * N * H * hd
-    kv = 2 * N * C * Hkv * hd
-    return (q_o + kv) * bytes_per_el
+def decode_attention_hbm_bytes(N, H, Hkv, C, hd, bytes_per_el=2,
+                               kv_dtype="bf16") -> int:
+    """Analytic HBM floor of the fused decode step (roofline overlay).
+
+    ``kv_dtype="int8"`` charges 1 byte/element for the cache payload plus
+    one fp32 per-token scale per K/V plane; Q and O stay in the compute
+    dtype either way."""
+    q_o = 2 * N * H * hd * bytes_per_el
+    if kv_dtype == "int8":
+        kv = 2 * N * C * (Hkv * hd + 4)
+    else:
+        kv = 2 * N * C * Hkv * hd * bytes_per_el
+    return q_o + kv

@@ -102,19 +102,29 @@ def flash_attention_ref(q, k, v, *, causal=True, scale=None):
 
 
 def decode_attention_ref(q, k_cache, v_cache, positions, *, scale=None,
-                         window=None, softcap=None):
+                         window=None, softcap=None, k_scale=None,
+                         v_scale=None):
     """Plain masked-softmax oracle for the decode-attention kernel.
 
     q: (N, H, hd) one query token per slot; k/v: (N, C, Hkv, hd) slot-major
     ring cache; positions: (N,) per-slot query position.  Ring index ``s``
     holds absolute position ``pos - ((pos - s) mod C)``; keys are valid when
-    that is >= 0 (and within ``window`` of the query when set)."""
+    that is >= 0 (and within ``window`` of the query when set).
+
+    int8 caches pass ``k_scale``/``v_scale`` (N, C) fp32 per-token scales;
+    the oracle dequantizes exactly the way the kernel's page loop does
+    (fp32 payload * scale, one rounding into the compute dtype) so the
+    quantized parity bound stays as tight as the bf16 one."""
     import math
 
     N, H, hd = q.shape
     C, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = H // Hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if k_scale is not None:
+        from ..quant import dequantize_kv
+        k_cache = dequantize_kv(k_cache, k_scale, q.dtype)
+        v_cache = dequantize_kv(v_cache, v_scale, q.dtype)
     kx = jnp.repeat(k_cache, G, axis=2)                 # (N, C, H, hd)
     vx = jnp.repeat(v_cache, G, axis=2)
     s = jnp.einsum("nhd,nchd->nhc", q.astype(jnp.float32),

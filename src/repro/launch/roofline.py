@@ -147,6 +147,30 @@ def loss_stage_seconds(batch_tokens: int, d_model: int, padded_vocab: int,
               bytes_h=bytes_act) / HBM_BW
 
 
+def kv_cache_slot_bytes(cfg, cache_len: int, *, kv_dtype=None) -> int:
+    """HBM bytes one serve slot's KV cache holds across all layers.
+
+    The per-token cost comes from :func:`repro.quant.kv_bytes_per_token`:
+    bf16 charges 2 bytes/element, int8 charges 1 byte/element plus two
+    fp32 per-token scales (K and V planes) per layer.  This is the
+    analytic side of the serve-tier capacity model — at a fixed HBM
+    budget the sustainable slot count is ``budget // slot_bytes``, so
+    int8 buys ``2E/(E+4)`` more slots for ``E = n_kv_heads * head_dim``
+    (~2x once E >> 4).  benchmarks/serve_sustained.py checks this
+    prediction against ``jax.Array.nbytes`` of the live engine state."""
+    from ..quant import kv_bytes_per_token
+    kv_dtype = kv_dtype or cfg.kv_dtype
+    return cfg.n_layers * cache_len * kv_bytes_per_token(
+        cfg.n_kv_heads, cfg.hd, kv_dtype)
+
+
+def kv_slots_at_budget(cfg, cache_len: int, hbm_budget_bytes: int,
+                       *, kv_dtype=None) -> int:
+    """Concurrent slots a fixed HBM budget sustains for the KV cache."""
+    return int(hbm_budget_bytes
+               // kv_cache_slot_bytes(cfg, cache_len, kv_dtype=kv_dtype))
+
+
 def model_flops_train(n_params_active: int, tokens: int) -> float:
     """6*N*D per step (fwd+bwd)."""
     return 6.0 * n_params_active * tokens

@@ -68,6 +68,12 @@ class ModelConfig:
     dtype: str = "bfloat16"           # activation/compute dtype
     param_dtype: str = "float32"
     norm_eps: float = 1e-6
+    # serving KV cache storage: "bf16" stores cache entries in the compute
+    # dtype; "int8" stores int8 payloads + one fp32 scale per written token
+    # (repro.quant.quantize_kv), roughly doubling slots per HBM byte.
+    # Implemented for the paged-KV families (dense/moe); bounded-state
+    # families (rwkv/griffin) and encdec reject "int8" at init_slots.
+    kv_dtype: str = "bf16"
 
     @property
     def hd(self) -> int:

@@ -223,6 +223,9 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, position):
 
 def init_slots(cfg: ModelConfig, n_slots: int, cache_len: int,
                src_len: int = 0) -> dict:
+    if cfg.kv_dtype != "bf16":
+        raise ValueError("kv_dtype=int8 is implemented for the paged-KV "
+                         "families (dense/moe); encdec keeps bf16 slots")
     L = cfg.n_layers
     dt = cfg.compute_dtype
     kv = (L, n_slots, cache_len, cfg.n_kv_heads, cfg.hd)
@@ -263,8 +266,9 @@ def decode_slots(cfg: ModelConfig, params, cache, tokens, positions):
     def body(x, layer):
         p, k_l, v_l, xk_l, xv_l = layer
         h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
-        a, k_l, v_l = decode_attention_slots(p["self_attn"], h, cfg, k_l,
-                                             v_l, positions)
+        a, kv_l = decode_attention_slots(p["self_attn"], h, cfg,
+                                         {"k": k_l, "v": v_l}, positions)
+        k_l, v_l = kv_l["k"], kv_l["v"]
         x = x + a
         h = rms_norm(x, p["ln_x"]["scale"], cfg.norm_eps)
         a = full_attention(p["cross_attn"], h, cfg, None, causal=False,
@@ -296,8 +300,10 @@ def prefill_into_slot(cfg: ModelConfig, params, cache, slot, tokens, start,
     def body(x, layer):
         p, k_l, v_l, xk_l, xv_l = layer
         h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
-        a, k_l, v_l = prefill_chunk_attention(p["self_attn"], h, cfg, k_l,
-                                              v_l, slot, start, qpos)
+        a, kv_l = prefill_chunk_attention(p["self_attn"], h, cfg,
+                                          {"k": k_l, "v": v_l}, slot,
+                                          start, qpos)
+        k_l, v_l = kv_l["k"], kv_l["v"]
         x = x + a
         h = rms_norm(x, p["ln_x"]["scale"], cfg.norm_eps)
         row_xk = jax.lax.dynamic_slice_in_dim(xk_l, slot, 1, axis=0)

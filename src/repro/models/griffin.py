@@ -307,6 +307,10 @@ def decode_step(cfg: ModelConfig, params, state, tokens, position):
 
 def init_slots(cfg: ModelConfig, n_slots: int, cache_len: int = 0) -> dict:
     """``cache_len`` ignored — state is bounded by ``local_window``."""
+    if cfg.kv_dtype != "bf16":
+        raise ValueError(
+            "kv_dtype=int8 targets unbounded paged KV (dense/moe); griffin's "
+            f"rolling window is already bounded at {cfg.local_window} tokens")
     return init_state(cfg, n_slots)
 
 
@@ -328,8 +332,9 @@ def decode_slots(cfg: ModelConfig, params, state, tokens, positions):
         x, n1 = rec_block_apply(p["rec1"], x, cfg, state=st_r1)
         x, n2 = rec_block_apply(p["rec2"], x, cfg, state=st_r2)
         h = rms_norm(x, p["attn"]["ln"]["scale"], cfg.norm_eps)
-        a, k_c, v_c = decode_attention_slots(p["attn"]["attn"], h, cfg, k_c,
-                                             v_c, positions)
+        a, kv_l = decode_attention_slots(p["attn"]["attn"], h, cfg,
+                                         {"k": k_c, "v": v_c}, positions)
+        k_c, v_c = kv_l["k"], kv_l["v"]
         x = x + a
         hm = rms_norm(x, p["attn"]["ln_mlp"]["scale"], cfg.norm_eps)
         x = x + mlp(p["attn"]["mlp"], hm, cfg)

@@ -327,18 +327,39 @@ def ring_mask(positions, C, window=None):
     return valid
 
 
-def decode_attention_slots(p, x, cfg: ModelConfig, k_cache, v_cache,
-                           positions, *, window=None, layer_scale=1.0):
-    """Per-slot decode: x (N, 1, D); caches (N, C, Hkv, hd); positions (N,).
+def kv_is_quantized(kv) -> bool:
+    """True when a slot-cache pytree carries int8 payloads + scale planes."""
+    return "k_scale" in kv
 
-    Returns (out (N, 1, D), new_k_cache, new_v_cache).  Unlike
-    :func:`decode_attention` every slot carries its own position, so a
-    continuous batch mixes requests at arbitrary depths in one program.
-    ``window`` and ``layer_scale`` may be traced (per-layer scan values).
+
+def _dequant_cache(q8, scale, dt):
+    """int8 cache (..., C, Hkv, hd) + scales (..., C) -> compute dtype.
+
+    Dequantizes in fp32 (exact for int8 * fp32) then rounds once into the
+    compute dtype — the same rounding the Pallas kernel applies per page,
+    so XLA and kernel read paths see identical values."""
+    from ..quant import dequantize_kv
+    return dequantize_kv(q8, scale, dt)
+
+
+def decode_attention_slots(p, x, cfg: ModelConfig, kv, positions, *,
+                           window=None, layer_scale=1.0):
+    """Per-slot decode: x (N, 1, D); ``kv`` the per-layer slot cache —
+    {"k", "v"} (N, C, Hkv, hd), plus {"k_scale", "v_scale"} (N, C) fp32
+    when ``cfg.kv_dtype == "int8"``; positions (N,).
+
+    Returns (out (N, 1, D), new_kv).  Unlike :func:`decode_attention`
+    every slot carries its own position, so a continuous batch mixes
+    requests at arbitrary depths in one program.  ``window`` and
+    ``layer_scale`` may be traced (per-layer scan values).  Quantized
+    caches write the new token as int8 + per-token scale (round-to-nearest,
+    repro.quant) and dequantize on read — the ring/mask math is unchanged.
     """
     dt = x.dtype
     N = x.shape[0]
+    k_cache, v_cache = kv["k"], kv["v"]
     C = k_cache.shape[1]
+    quant = kv_is_quantized(kv)
     q, k, v = _qkv(p, x, cfg)
     pos2 = positions.astype(jnp.int32)[:, None]          # (N, 1)
     if cfg.rope:
@@ -346,53 +367,96 @@ def decode_attention_slots(p, x, cfg: ModelConfig, k_cache, v_cache,
               if cfg.mrope_sections else pos2)
         q = apply_rope(q, rp, cfg.rope_theta, cfg.mrope_sections)
         k = apply_rope(k, rp, cfg.rope_theta, cfg.mrope_sections)
-    k_cache = ring_write(k_cache, k, positions)
-    v_cache = ring_write(v_cache, v, positions)
+    if quant:
+        from ..quant import quantize_kv
+        k8, ks = quantize_kv(k)                          # (N,1,Hkv,hd),(N,1)
+        v8, vs = quantize_kv(v)
+        new_kv = {"k": ring_write(k_cache, k8, positions),
+                  "v": ring_write(v_cache, v8, positions),
+                  "k_scale": ring_write(kv["k_scale"], ks, positions),
+                  "v_scale": ring_write(kv["v_scale"], vs, positions)}
+    else:
+        new_kv = {"k": ring_write(k_cache, k, positions),
+                  "v": ring_write(v_cache, v, positions)}
     scale = layer_scale / math.sqrt(cfg.hd)
     if _DECODE_ATTN_IMPL["impl"] == "pallas":
         from ..kernels.decode_attention import decode_attention_pallas
         qs = (q[:, 0].astype(jnp.float32) * scale).astype(q.dtype)
         out = decode_attention_pallas(
-            qs, k_cache, v_cache, positions, scale=1.0, window=window,
-            softcap=cfg.attn_logit_softcap)
+            qs, new_kv["k"], new_kv["v"], positions, scale=1.0,
+            window=window, softcap=cfg.attn_logit_softcap,
+            k_scale=new_kv.get("k_scale"), v_scale=new_kv.get("v_scale"))
         out = out.reshape(N, 1, cfg.n_heads * cfg.hd).astype(dt)
     else:
-        scores = attention_scores_block(q, k_cache, cfg, scale)  # (N,Hkv,G,1,C)
+        if quant:
+            k_read = _dequant_cache(new_kv["k"], new_kv["k_scale"], dt)
+            v_read = _dequant_cache(new_kv["v"], new_kv["v_scale"], dt)
+        else:
+            k_read, v_read = new_kv["k"], new_kv["v"]
+        scores = attention_scores_block(q, k_read, cfg, scale)  # (N,Hkv,G,1,C)
         valid = ring_mask(positions, C, window)
         scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
         w = jax.nn.softmax(scores, axis=-1).astype(dt)
-        out = jnp.einsum("bkgst,btkh->bskgh", w, v_cache)
+        out = jnp.einsum("bkgst,btkh->bskgh", w, v_read)
         out = out.reshape(N, 1, cfg.n_heads * cfg.hd)
-    return out @ p["wo"].astype(dt), k_cache, v_cache
+    return out @ p["wo"].astype(dt), new_kv
 
 
-def prefill_chunk_attention(p, h, cfg: ModelConfig, k_l, v_l, slot, start,
+def prefill_chunk_attention(p, h, cfg: ModelConfig, kv, slot, start,
                             qpos, *, window=None, layer_scale=1.0):
     """Chunk-prefill attention for one slot (shared by the transformer and
-    encdec ``prefill_into_slot``): h (1, P, D) normed chunk; k_l/v_l
-    (N, C, Hkv, hd); ``slot``/``start`` traced scalars; qpos (P,) the
-    chunk's absolute positions.
+    encdec ``prefill_into_slot``): h (1, P, D) normed chunk; ``kv`` the
+    per-layer slot cache ({"k", "v"} (N, C, Hkv, hd) [+ scale planes
+    (N, C) when quantized]); ``slot``/``start`` traced scalars; qpos (P,)
+    the chunk's absolute positions.
 
     Writes the chunk's K/V at [slot, start:start+P] and attends the chunk
     queries against the slot's full ring row under :func:`ring_mask` —
     entries past the chunk's valid tokens may be written freely, they stay
-    masked until decode overwrites them.  Returns (out (1, P, D), k_l, v_l).
+    masked until decode overwrites them.  Quantized caches store the chunk
+    as int8 + per-token scales, and the chunk attends the *dequantized*
+    row (its own tokens included), so page-aligned cache state is a pure
+    function of the token prefix — the bit-exactness the shared-prefix
+    page reuse in serve/prefix_cache.py relies on.  Returns
+    (out (1, P, D), new_kv).
     """
     dt = h.dtype
     P = h.shape[1]
+    k_l, v_l = kv["k"], kv["v"]
     C = k_l.shape[1]
+    quant = kv_is_quantized(kv)
     q, k, v = _qkv(p, h, cfg)
     if cfg.rope:
         rp = (jnp.broadcast_to(qpos[None, None], (1, 3, P))
               if cfg.mrope_sections else qpos[None])
         q = apply_rope(q, rp, cfg.rope_theta, cfg.mrope_sections)
         k = apply_rope(k, rp, cfg.rope_theta, cfg.mrope_sections)
-    k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype),
-                                       (slot, start, 0, 0))
-    v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype),
-                                       (slot, start, 0, 0))
-    row_k = jax.lax.dynamic_slice_in_dim(k_l, slot, 1, axis=0)
-    row_v = jax.lax.dynamic_slice_in_dim(v_l, slot, 1, axis=0)
+    if quant:
+        from ..quant import quantize_kv
+        k8, ks = quantize_kv(k)                          # (1,P,Hkv,hd),(1,P)
+        v8, vs = quantize_kv(v)
+        new_kv = {
+            "k": jax.lax.dynamic_update_slice(k_l, k8, (slot, start, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(v_l, v8, (slot, start, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(
+                kv["k_scale"], ks, (slot, start)),
+            "v_scale": jax.lax.dynamic_update_slice(
+                kv["v_scale"], vs, (slot, start)),
+        }
+    else:
+        new_kv = {
+            "k": jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype),
+                                              (slot, start, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype),
+                                              (slot, start, 0, 0)),
+        }
+    row = {name: jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=0)
+           for name, leaf in new_kv.items()}
+    if quant:
+        row_k = _dequant_cache(row["k"], row["k_scale"], dt)
+        row_v = _dequant_cache(row["v"], row["v_scale"], dt)
+    else:
+        row_k, row_v = row["k"], row["v"]
     scale = layer_scale / math.sqrt(cfg.hd)
     scores = attention_scores_block(q, row_k, cfg, scale)   # (1,Hkv,G,P,C)
     mask = ring_mask(qpos, C, window)                       # (P, C)
@@ -400,7 +464,7 @@ def prefill_chunk_attention(p, h, cfg: ModelConfig, k_l, v_l, slot, start,
     w = jax.nn.softmax(scores, axis=-1).astype(dt)
     out = jnp.einsum("bkgst,btkh->bskgh", w, row_v)
     out = out.reshape(1, P, cfg.n_heads * cfg.hd)
-    return out @ p["wo"].astype(dt), k_l, v_l
+    return out @ p["wo"].astype(dt), new_kv
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,14 @@ def get_model(cfg: ModelConfig) -> SimpleNamespace:
     ``slot``/``start``/``n_valid`` and the per-slot ``pos`` vector are
     traced, so each arch compiles exactly one prefill and one decode
     program regardless of batch composition or request lengths.
+
+    ``cfg.kv_dtype`` threads through the whole protocol: ``"int8"`` makes
+    ``init_slots`` allocate int8 K/V payloads plus fp32 per-token scale
+    planes, and prefill/decode quantize at write time and dequantize at
+    read time (models/layers.py, repro.quant).  The paged-KV families
+    (dense/moe) implement it; rwkv/griffin (bounded recurrent state) and
+    encdec raise at ``init_slots``.  Since the config keys the compiled
+    programs, the dtype forks compilation per config — never per batch.
     """
     if cfg.family in ("dense", "moe"):
         return SimpleNamespace(

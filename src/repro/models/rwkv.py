@@ -309,6 +309,9 @@ def decode_step(cfg: ModelConfig, params, state, tokens, position=None):
 
 def init_slots(cfg: ModelConfig, n_slots: int, cache_len: int = 0) -> dict:
     """``cache_len`` ignored — O(1) state regardless of request length."""
+    if cfg.kv_dtype != "bf16":
+        raise ValueError("kv_dtype=int8 is implemented for the paged-KV "
+                         "families (dense/moe); rwkv has no KV cache")
     return init_state(cfg, n_slots)
 
 

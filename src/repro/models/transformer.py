@@ -394,6 +394,13 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, position):
 def init_slots(cfg: ModelConfig, n_slots: int, cache_len: int) -> dict:
     L = cfg.n_layers
     shape = (L, n_slots, cache_len, cfg.n_kv_heads, cfg.hd)
+    if cfg.kv_dtype == "int8":
+        # int8 payloads + one fp32 scale per written token per K/V plane
+        # (repro.quant.quantize_kv): ~2x slots per HBM byte vs bf16
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros((L, n_slots, cache_len), jnp.float32),
+                "v_scale": jnp.zeros((L, n_slots, cache_len), jnp.float32)}
     return {"k": jnp.zeros(shape, cfg.compute_dtype),
             "v": jnp.zeros(shape, cfg.compute_dtype)}
 
@@ -407,25 +414,28 @@ def _slot_layer_sweep(cfg: ModelConfig, params, cache, x, attn_fn):
     """Layer sweep shared by :func:`decode_slots` and
     :func:`prefill_into_slot` — the grouped-MoE reshape, attention/FFN
     residual plumbing and both scan bodies live once, parameterized by the
-    inner attention call ``attn_fn(p_attn, h, k_l, v_l, window, scale) ->
-    (a, k_l, v_l)``.  Returns (hidden, new_cache)."""
+    inner attention call ``attn_fn(p_attn, h, kv_l, window, scale) ->
+    (a, kv_l)``.  The per-layer ``kv_l`` dict carries whatever leaves the
+    cache holds ({"k", "v"} [+ the int8 path's scale planes]) — the sweep
+    never enumerates them, so new cache layouts thread through without
+    touching the scan.  Returns (hidden, new_cache)."""
     windows = layer_windows(cfg, cache["k"].shape[2])
     scales = layer_scales(cfg)
 
     grouped = cfg.family == "moe" and cfg.moe_every > 1
     if grouped:
         ng = n_scan_groups(cfg)
-        kc = cache["k"].reshape((ng, cfg.moe_every) + cache["k"].shape[1:])
-        vc = cache["v"].reshape((ng, cfg.moe_every) + cache["v"].shape[1:])
+        kvs = {name: leaf.reshape((ng, cfg.moe_every) + leaf.shape[1:])
+               for name, leaf in cache.items()}
     else:
-        kc, vc = cache["k"], cache["v"]
+        kvs = dict(cache)
 
-    def attn_sub(p, x, k_l, v_l, w, s):
+    def attn_sub(p, x, kv_l, w, s):
         h = _norm(p["ln1"], x, cfg)
-        a, k_l, v_l = attn_fn(p["attn"], h, k_l, v_l, w, s)
+        a, kv_l = attn_fn(p["attn"], h, kv_l, w, s)
         if cfg.post_norms:
             a = _norm(p["ln1_post"], a, cfg)
-        return x + a, k_l, v_l
+        return x + a, kv_l
 
     def ffn_sub(p, x):
         h = _norm(p["ln2"], x, cfg)
@@ -439,27 +449,28 @@ def _slot_layer_sweep(cfg: ModelConfig, params, cache, x, attn_fn):
 
     if grouped:
         def body(x, layer):
-            p, k_g, v_g, w, s = layer
-            x, k0, v0 = attn_sub(p["dense"], x, k_g[0], v_g[0], w, s)
+            p, kv_g, w, s = layer
+            x, kv0 = attn_sub(p["dense"], x,
+                              jax.tree.map(lambda l: l[0], kv_g), w, s)
             x = ffn_sub(p["dense"], x)
-            x, k1, v1 = attn_sub(p["moe"], x, k_g[1], v_g[1], w, s)
+            x, kv1 = attn_sub(p["moe"], x,
+                              jax.tree.map(lambda l: l[1], kv_g), w, s)
             x = ffn_sub(p["moe"], x)
-            return x, (jnp.stack([k0, k1]), jnp.stack([v0, v1]))
+            return x, jax.tree.map(lambda a, b: jnp.stack([a, b]), kv0, kv1)
 
-        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kc, vc,
-                                             windows, scales))
-        return x, {"k": nk.reshape(cache["k"].shape),
-                   "v": nv.reshape(cache["v"].shape)}
+        x, nkv = jax.lax.scan(body, x, (params["layers"], kvs,
+                                        windows, scales))
+        return x, {name: leaf.reshape(cache[name].shape)
+                   for name, leaf in nkv.items()}
 
     def body(x, layer):
-        p, k_l, v_l, w, s = layer
-        x, k_l, v_l = attn_sub(p, x, k_l, v_l, w, s)
+        p, kv_l, w, s = layer
+        x, kv_l = attn_sub(p, x, kv_l, w, s)
         x = ffn_sub(p, x)
-        return x, (k_l, v_l)
+        return x, kv_l
 
-    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kc, vc,
-                                         windows, scales))
-    return x, {"k": nk, "v": nv}
+    x, nkv = jax.lax.scan(body, x, (params["layers"], kvs, windows, scales))
+    return x, nkv
 
 
 def decode_slots(cfg: ModelConfig, params, cache, tokens, positions):
@@ -473,8 +484,8 @@ def decode_slots(cfg: ModelConfig, params, cache, tokens, positions):
     positions = positions.astype(jnp.int32)
     x = embed(params["embed"], tokens, cfg, positions[:, None])
 
-    def attn_fn(p, h, k_l, v_l, w, s):
-        return decode_attention_slots(p, h, cfg, k_l, v_l, positions,
+    def attn_fn(p, h, kv_l, w, s):
+        return decode_attention_slots(p, h, cfg, kv_l, positions,
                                       window=w, layer_scale=s)
 
     x, new_cache = _slot_layer_sweep(cfg, params, cache, x, attn_fn)
@@ -500,8 +511,8 @@ def prefill_into_slot(cfg: ModelConfig, params, cache, slot, tokens, start,
     qpos = start + jnp.arange(P, dtype=jnp.int32)       # (P,)
     x = embed(params["embed"], tokens, cfg, qpos[None])
 
-    def attn_fn(p, h, k_l, v_l, w, s):
-        return prefill_chunk_attention(p, h, cfg, k_l, v_l, slot, start,
+    def attn_fn(p, h, kv_l, w, s):
+        return prefill_chunk_attention(p, h, cfg, kv_l, slot, start,
                                        qpos, window=w, layer_scale=s)
 
     x, new_cache = _slot_layer_sweep(cfg, params, cache, x, attn_fn)

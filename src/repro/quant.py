@@ -1,0 +1,121 @@
+"""Shared int8 block-quantization core.
+
+One implementation serves two consumers:
+
+  * the data-parallel gradient compressor
+    (``distributed/compression.py``) — 256-element blocks, stochastic
+    rounding keyed by a counter-based hash so the wire representation is
+    device-count invariant, error feedback carried by the caller;
+  * the serving KV cache (``models/layers.py`` + the serve engine) — one
+    block per written token (``n_kv_heads * head_dim`` elements),
+    deterministic round-to-nearest so quantized pages are pure functions
+    of their content and shared-prefix page reuse stays bit-exact.
+
+Properties the tests pin (tests/test_compression.py hypothesis suite,
+tests/test_decode_attention.py quant-bound checks):
+
+  * round-to-nearest (``rng=None``): |deq - x| <= scale / 2 per element,
+    and the fp32 residual ``x - deq`` is exact (Sterbenz);
+  * stochastic rounding: |deq - x| <= scale, unbiased in expectation,
+    noise a pure function of (seed, global element index).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_GOLDEN = 0x9E3779B9  # 2^32 / golden ratio; per-shard seed decorrelation
+
+
+def _as_seed(rng):
+    """Normalize an rng (PRNGKey, typed key, or int scalar) to uint32."""
+    if rng is None:
+        return None
+    if not isinstance(rng, jax.Array):
+        rng = jnp.asarray(rng)
+    if rng.ndim == 0 and jnp.issubdtype(rng.dtype, jnp.integer):
+        return rng.astype(jnp.uint32)
+    return jax.random.randint(rng, (), 0,
+                              jnp.iinfo(jnp.int32).max).astype(jnp.uint32)
+
+
+def _uniform_noise(seed, idx):
+    """Counter-based uniform noise in [-0.5, 0.5).
+
+    A pure function of (seed, global element index) — murmur3-style integer
+    finalizer — so the same element rounds the same way regardless of how
+    the shard is segmented across devices.  jax.random.uniform keyed per
+    device would break 1-vs-N-device trajectory parity.
+    """
+    x = idx.astype(jnp.uint32) * jnp.uint32(2654435761) + seed
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x.astype(jnp.float32) * jnp.float32(2.0 ** -32) - jnp.float32(0.5)
+
+
+def _quantize(x, block: int, rng=None, *, offset=0):
+    """int8 block quantization with per-block fp32 scales.
+
+    ``rng`` None selects round-to-nearest (|deq - x| <= scale/2, and the
+    fp32 residual ``x - deq`` is *exact* by Sterbenz); otherwise stochastic
+    rounding driven by ``_uniform_noise`` (|deq - x| <= scale, unbiased in
+    expectation).  ``offset`` is the global element index of ``x[0]`` within
+    its flat shard — it keys the noise, not the math, so segmenting a shard
+    changes nothing as long as segments stay block-aligned.
+
+    Returns (q int8 [nblocks, block], scales fp32 [nblocks, 1], deq fp32
+    shaped like x)."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    if pad:  # engine shards are block multiples: keep their HLO pad-free
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    scaled = blocks / scale
+    seed = _as_seed(rng)
+    if seed is not None:
+        idx = (jnp.asarray(offset, jnp.uint32)
+               + jnp.arange(flat.size, dtype=jnp.uint32)).reshape(-1, block)
+        scaled = scaled + _uniform_noise(seed, idx)
+    q = jnp.clip(jnp.round(scaled), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:x.size].reshape(x.shape)
+    return q, scale, deq
+
+
+# ---------------------------------------------------------------------------
+# KV-cache view: one quantization block per written token
+
+
+def quantize_kv(x):
+    """Per-token int8 KV quantization: x (..., Hkv, hd) -> (q int8 shaped
+    like x, scales fp32 (...,)).
+
+    Each token's (Hkv, hd) slab is one :func:`_quantize` block with
+    deterministic round-to-nearest, so a quantized page is a pure function
+    of its content (prefix-cache page copies stay bit-exact) and the
+    element-wise error is bounded by half that token's scale — strictly
+    tighter than a one-scale-per-page bound."""
+    hkv, hd = x.shape[-2], x.shape[-1]
+    q, scale, _ = _quantize(x.astype(jnp.float32), hkv * hd, None)
+    return q.reshape(x.shape), scale.reshape(x.shape[:-2])
+
+
+def dequantize_kv(q, scale, dtype):
+    """Inverse of :func:`quantize_kv`: int8 (..., Hkv, hd) + fp32 scales
+    (...,) -> ``dtype``.  Dequantizes in fp32 (int8 * fp32 is exact) and
+    rounds once into the compute dtype."""
+    return (q.astype(jnp.float32) * scale[..., None, None]).astype(dtype)
+
+
+def kv_bytes_per_token(n_kv_heads: int, head_dim: int,
+                       kv_dtype: str = "bf16") -> int:
+    """HBM bytes of ONE cache entry (K + V) for one token in one layer:
+    bf16 spends 2 bytes/element; int8 spends 1 byte/element plus one fp32
+    scale per token per K/V plane.  The serving-capacity model in
+    launch/roofline.py multiplies this by L * cache_len per slot."""
+    el = n_kv_heads * head_dim
+    if kv_dtype == "int8":
+        return 2 * (el + 4)
+    return 2 * 2 * el

@@ -1,3 +1,4 @@
 from .decode import (generate, generate_lockstep, make_decode_burst,
                      make_serve_step)
 from .engine import Request, RequestResult, ServeEngine
+from .prefix_cache import PrefixCache

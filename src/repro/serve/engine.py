@@ -23,7 +23,22 @@ single RNG chain, so sampled tokens depend on scheduling (reproducible
 only for a fixed seed + request stream).
 
 Telemetry: per-request queue/prefill/first-token/total latency and
-per-tick slot utilization, aggregated by :meth:`stats`.
+per-tick slot utilization, aggregated by :meth:`stats` (p50/p95/p99
+TTFT, TPOT and queue wait).
+
+Serving tier-2 options:
+
+  * ``prefix_cache=True`` — shared-prefix page reuse.  Completed
+    page-aligned prefill chunks are copied into a device-side pool and
+    indexed by :class:`~repro.serve.prefix_cache.PrefixCache`; admission
+    restores the longest cached prefix by copying whole pages back and
+    starts chunked prefill at the cache boundary.  Restored pages are
+    bit-copies and chunk boundaries are unchanged, so greedy outputs are
+    token-identical to a cold prefill.
+  * ``kv_dtype="int8"`` — per-token int8 KV payloads with fp32 scales
+    (see models/layers.py); roughly halves cache HBM so a fixed budget
+    sustains ~2x the slots.  Forks the compiled programs per dtype via
+    the config, never per batch composition.
 """
 from __future__ import annotations
 
@@ -39,8 +54,16 @@ import numpy as np
 
 from ..models import ModelConfig, get_model
 from .decode import NO_EOS, make_decode_burst, sample_tokens
+from .prefix_cache import ROOT, PrefixCache
 
 FREE, PREFILL, ACTIVE = 0, 1, 2
+
+
+def _pct(xs, q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return float(xs[min(len(xs) - 1, int(len(xs) * q))])
 
 
 @functools.lru_cache(maxsize=32)
@@ -64,6 +87,37 @@ def _compiled_fns(cfg: ModelConfig, steps_per_tick: int):
         cfg, p, s, slot, fr), donate_argnums=(1,))
         if cfg.family == "encdec" else None)
     return prefill, reset, burst, enc
+
+
+@functools.lru_cache(maxsize=32)
+def _page_copy_fns(cfg: ModelConfig, page_len: int):
+    """Two jitted one-page copies between a slot cache and the prefix pool.
+
+    slot/start/pool_idx are traced scalars, so each direction compiles
+    exactly once per (config, page_len) whatever pages move — the engine's
+    one-program-per-family invariant extends to the prefix cache.  The
+    slice indexing is generic over leaf rank: 5-D k/v (L, N, C, Hkv, hd)
+    and 3-D int8 scale planes (L, N, C) both have (layer, row, position)
+    as their leading axes, which is all a page copy touches."""
+    del cfg  # jit keys on leaf shapes; cfg keys the lru_cache entry
+
+    def _copy_page(dst, src, dst_row, dst_off, src_row, src_off):
+        def leaf(d, s):
+            sizes = (s.shape[0], 1, page_len) + s.shape[3:]
+            zeros = (0,) * (s.ndim - 3)
+            page = jax.lax.dynamic_slice(s, (0, src_row, src_off) + zeros,
+                                         sizes)
+            return jax.lax.dynamic_update_slice(
+                d, page, (0, dst_row, dst_off) + zeros)
+        return jax.tree.map(leaf, dst, src)
+
+    pool_to_slot = jax.jit(
+        lambda state, pool, slot, start, pidx: _copy_page(
+            state, pool, slot, start, pidx, 0), donate_argnums=(0,))
+    slot_to_pool = jax.jit(
+        lambda pool, state, slot, start, pidx: _copy_page(
+            pool, state, pidx, 0, slot, start), donate_argnums=(0,))
+    return pool_to_slot, slot_to_pool
 
 
 @dataclasses.dataclass
@@ -102,7 +156,12 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
                  cache_len: int = 256, page_len: int = 32,
                  steps_per_tick: int = 8, seed: int = 0, src_len: int = 0,
-                 prefill_chunks_per_tick: int = 1):
+                 prefill_chunks_per_tick: int = 1,
+                 prefix_cache: bool = False, prefix_pool_pages: int = 0,
+                 kv_dtype: Optional[str] = None):
+        if kv_dtype is not None and kv_dtype != cfg.kv_dtype:
+            # fork the config so _compiled_fns keys per-dtype programs
+            cfg = dataclasses.replace(cfg, kv_dtype=kv_dtype)
         self.cfg = cfg
         self.params = params
         self.model = get_model(cfg)
@@ -122,7 +181,25 @@ class ServeEngine:
         else:
             self.state = self.model.init_slots(cfg, n_slots, self.cache_len)
         (self._prefill_jit, self._reset_jit, self._burst_jit,
-         self._enc_jit) = _compiled_fns(cfg, steps_per_tick)
+         self._enc_jit) = _compiled_fns(self.cfg, steps_per_tick)
+
+        # shared-prefix page pool: same pytree layout as the slot cache
+        # with the slot axis replaced by pool pages of one page_len each
+        self._prefix: Optional[PrefixCache] = None
+        self._pool = None
+        if prefix_cache:
+            if self.cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    "prefix cache needs a paged KV cache; family "
+                    f"{self.cfg.family!r} has none")
+            pool_pages = prefix_pool_pages or 4 * n_slots
+            self._prefix = PrefixCache(pool_pages, page_len)
+            self._pool = jax.tree.map(
+                lambda l: jnp.zeros(
+                    (l.shape[0], pool_pages, page_len) + l.shape[3:],
+                    l.dtype), self.state)
+            self._pool_to_slot, self._slot_to_pool = _page_copy_fns(
+                self.cfg, page_len)
 
         # host-side slot table
         self.slot_mode = [FREE] * n_slots
@@ -130,6 +207,10 @@ class ServeEngine:
         self.slot_cursor = [0] * n_slots          # prefill progress (tokens)
         self.slot_out: List[List[int]] = [[] for _ in range(n_slots)]
         self.slot_meta: List[Optional[dict]] = [None] * n_slots
+        # per-slot prefix-cache chain: held nodes + tail key for inserts
+        # (None tail = pool exhausted mid-chain, stop inserting)
+        self.slot_prefix_nodes: List[list] = [[] for _ in range(n_slots)]
+        self.slot_chain_key: List[Optional[str]] = [ROOT] * n_slots
         self._last_tok = np.zeros((n_slots,), np.int32)
         self._pos = np.zeros((n_slots,), np.int32)
         self._rem = np.zeros((n_slots,), np.int32)
@@ -186,6 +267,25 @@ class ServeEngine:
             self.slot_req[slot] = req
             self.slot_cursor[slot] = 0
             self.slot_out[slot] = []
+            self.slot_prefix_nodes[slot] = []
+            self.slot_chain_key[slot] = ROOT
+            if self._prefix is not None and req.frames is None:
+                prompt = np.asarray(req.tokens, np.int32).reshape(-1)
+                # cap below prompt_len so >= one real chunk still runs and
+                # emits the last-token logits _activate samples from
+                max_pages = min((prompt.shape[0] - 1) // self.page_len,
+                                self.cache_len // self.page_len)
+                chain = self._prefix.lookup(prompt, max_pages)
+                self._prefix.acquire(chain)
+                for i, node in enumerate(chain):
+                    self.state = self._pool_to_slot(
+                        self.state, self._pool, jnp.int32(slot),
+                        jnp.int32(i * self.page_len),
+                        jnp.int32(node.pool_idx))
+                self.slot_prefix_nodes[slot] = list(chain)
+                if chain:
+                    self.slot_chain_key[slot] = chain[-1].key
+                    self.slot_cursor[slot] = len(chain) * self.page_len
             self.slot_meta[slot] = {"submitted_t": submitted_t,
                                     "admitted_t": time.perf_counter()}
             self._temps[slot] = req.temperature
@@ -209,6 +309,20 @@ class ServeEngine:
                     jnp.asarray(chunk)[None], jnp.int32(start),
                     jnp.int32(n_valid))
                 self.slot_cursor[slot] = start + n_valid
+                if (self._prefix is not None and req.frames is None
+                        and self.slot_chain_key[slot] is not None
+                        and n_valid == P and start % P == 0):
+                    node, fresh = self._prefix.insert(
+                        self.slot_chain_key[slot], prompt[start:start + P])
+                    if node is None:
+                        self.slot_chain_key[slot] = None
+                    else:
+                        if fresh:
+                            self._pool = self._slot_to_pool(
+                                self._pool, self.state, jnp.int32(slot),
+                                jnp.int32(start), jnp.int32(node.pool_idx))
+                        self.slot_prefix_nodes[slot].append(node)
+                        self.slot_chain_key[slot] = node.key
                 if self.slot_cursor[slot] >= prompt.shape[0]:
                     self._activate(slot, logits)
                     break
@@ -270,6 +384,10 @@ class ServeEngine:
             done_t=time.perf_counter()))
         self.slot_mode[slot] = FREE
         self.slot_req[slot] = None
+        if self._prefix is not None:
+            self._prefix.release(self.slot_prefix_nodes[slot])
+            self.slot_prefix_nodes[slot] = []
+            self.slot_chain_key[slot] = ROOT
         self._rem[slot] = 0
         self._temps[slot] = 0.0
         self._eos[slot] = NO_EOS
@@ -296,7 +414,12 @@ class ServeEngine:
     def stats(self) -> Dict[str, float]:
         lat = sorted(self.token_latencies) or [0.0]
         util = self.tick_utilization or [0.0]
-        return {
+        ttft = [r.ttft_s for r in self.results]
+        # time-per-output-token after the first (steady decode cadence)
+        tpot = [(r.done_t - r.first_token_t) / max(1, len(r.tokens) - 1)
+                for r in self.results]
+        qwait = [r.admitted_t - r.submitted_t for r in self.results]
+        out = {
             "tokens_emitted": self.tokens_emitted,
             "decode_ticks": self.decode_ticks,
             "slot_utilization": float(np.mean(util)),
@@ -305,6 +428,17 @@ class ServeEngine:
                                              int(len(lat) * 0.95))]),
             "mean_request_latency_s": float(np.mean(
                 [r.latency_s for r in self.results])) if self.results else 0.0,
-            "mean_ttft_s": float(np.mean(
-                [r.ttft_s for r in self.results])) if self.results else 0.0,
+            "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+            "ttft_p50_s": _pct(ttft, 0.50),
+            "ttft_p95_s": _pct(ttft, 0.95),
+            "ttft_p99_s": _pct(ttft, 0.99),
+            "tpot_p50_s": _pct(tpot, 0.50),
+            "tpot_p95_s": _pct(tpot, 0.95),
+            "tpot_p99_s": _pct(tpot, 0.99),
+            "queue_wait_p50_s": _pct(qwait, 0.50),
+            "queue_wait_p95_s": _pct(qwait, 0.95),
+            "queue_wait_p99_s": _pct(qwait, 0.99),
         }
+        if self._prefix is not None:
+            out.update(self._prefix.stats())
+        return out

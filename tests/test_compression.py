@@ -107,3 +107,18 @@ def test_error_feedback_residual_exactly_reconstructs(n, seed):
     _, _, deq = _quantize(x, 256, None)
     resid = x - deq  # what the compressor stores as error feedback
     np.testing.assert_array_equal(np.asarray(deq + resid), np.asarray(x))
+
+
+def test_quantize_core_is_shared_with_kv_cache():
+    """The quantizer the serve tier's int8 KV cache uses (repro.quant) is
+    the SAME object compression imports — the hypothesis properties above
+    cover both consumers.  Deterministic mode (rng=None, what the KV path
+    uses) keeps the tighter half-bin bound."""
+    from repro import quant
+
+    assert _quantize is quant._quantize
+    x = jax.random.normal(jax.random.PRNGKey(7), (512,)) * 2.0
+    _, scale, deq = quant._quantize(x, 128, None)
+    err = np.abs(np.asarray(deq - x))
+    bound = np.repeat(np.asarray(scale)[:, 0], 128) / 2
+    assert np.all(err <= bound + 1e-7)

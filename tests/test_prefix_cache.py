@@ -1,0 +1,213 @@
+"""Shared-prefix KV page reuse: host index semantics, engine integration
+(token identity warm vs cold, across families and KV dtypes), eviction
+under pool pressure, and the one-program compilation invariant.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.serve import PrefixCache, Request, ServeEngine
+from repro.serve.prefix_cache import ROOT, chunk_key
+
+pytestmark = pytest.mark.serve
+
+PAGE = 8
+
+
+def _chunks(seed, n, lo=0, hi=512):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(lo, hi, PAGE).astype(np.int32) for _ in range(n)]
+
+
+# ---------------------------------------------------------------- host index
+def test_chain_hash_commits_to_full_prefix():
+    """Identical chunks under different parents are different pages."""
+    c = _chunks(0, 1)[0]
+    assert chunk_key(ROOT, c) != chunk_key(chunk_key(ROOT, c), c)
+
+
+def test_insert_lookup_roundtrip_and_refcounts():
+    pc = PrefixCache(pool_pages=8, page_len=PAGE)
+    chunks = _chunks(1, 3)
+    tokens = np.concatenate(chunks)
+    key = ROOT
+    for c in chunks:
+        node, fresh = pc.insert(key, c)
+        assert fresh
+        key = node.key
+    chain = pc.lookup(tokens, max_pages=3)
+    assert [n.pool_idx for n in chain] == [0, 1, 2]
+    # a diverging third chunk only matches the first two pages
+    other = np.concatenate(chunks[:2] + _chunks(2, 1))
+    assert len(pc.lookup(other, max_pages=3)) == 2
+    assert pc.hits == 2 and pc.lookups == 2 and pc.pages_reused == 5
+    # re-inserting an existing chain entry is not fresh and re-acquires
+    node, fresh = pc.insert(ROOT, chunks[0])
+    assert not fresh and node.refcount == 2
+    pc.release([node])
+    assert node.refcount == 1
+
+
+def test_eviction_is_lru_and_leaf_only():
+    pc = PrefixCache(pool_pages=2, page_len=PAGE)
+    a, _ = pc.insert(ROOT, _chunks(3, 1)[0])
+    b, _ = pc.insert(a.key, _chunks(4, 1)[0])
+    pc.release([a, b])
+    # pool full; a is older but interior (has a child) -> b must go
+    c, fresh = pc.insert(ROOT, _chunks(5, 1)[0])
+    assert fresh and c.pool_idx == b.pool_idx
+    assert pc.evictions == 1 and a.key in pc.nodes and b.key not in pc.nodes
+
+
+def test_insert_fails_when_everything_is_held():
+    pc = PrefixCache(pool_pages=1, page_len=PAGE)
+    a, _ = pc.insert(ROOT, _chunks(6, 1)[0])   # held: refcount 1
+    node, fresh = pc.insert(ROOT, _chunks(7, 1)[0])
+    assert node is None and not fresh
+    pc.release([a])
+    node, fresh = pc.insert(ROOT, _chunks(7, 1)[0])
+    assert fresh  # evictable now
+
+
+def test_double_release_raises():
+    pc = PrefixCache(pool_pages=1, page_len=PAGE)
+    a, _ = pc.insert(ROOT, _chunks(8, 1)[0])
+    pc.release([a])
+    with pytest.raises(RuntimeError):
+        pc.release([a])
+
+
+# ------------------------------------------------------------ engine paths
+def _engine_case(arch, kv_dtype, tag, **eng_kw):
+    """Uniquely-named config so each case gets fresh compiled-fn caches
+    (the _cache_size() == 1 asserts must not see other tests' entries)."""
+    cfg = get_config(arch, smoke=True)
+    cfg = dataclasses.replace(cfg, name=f"{cfg.name}-pfx-{tag}")
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+
+    shared = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(42), (4 * PAGE + 3,), 0, cfg.vocab_size))
+
+    def requests():
+        out = []
+        for i in range(5):
+            tail = np.asarray(jax.random.randint(
+                jax.random.PRNGKey(100 + i), (3 + 2 * i,), 0,
+                cfg.vocab_size))
+            out.append(Request(uid=i, tokens=np.concatenate([shared, tail]),
+                               max_new=5))
+        return out
+
+    kw = dict(n_slots=2, cache_len=64, page_len=PAGE, steps_per_tick=4,
+              kv_dtype=kv_dtype)
+    kw.update(eng_kw)
+    cold = ServeEngine(cfg, params, **kw)
+    for r in requests():
+        cold.submit(r)
+    cold_out = {r.uid: r.tokens for r in cold.run()}
+    warm = ServeEngine(cfg, params, prefix_cache=True, **kw)
+    for r in requests():
+        warm.submit(r)
+    warm_out = {r.uid: r.tokens for r in warm.run()}
+    return cold, warm, cold_out, warm_out
+
+
+@pytest.mark.parametrize("arch,kv_dtype", [
+    ("yi-6b", "bf16"), ("yi-6b", "int8"),
+    ("deepseek-moe-16b", "bf16"), ("deepseek-moe-16b", "int8"),
+])
+def test_warm_tokens_identical_to_cold(arch, kv_dtype):
+    """Greedy decode over restored pages is token-identical to a cold
+    prefill — pages are bit-copies, chunk boundaries are unchanged, and
+    int8 writes are deterministic — for a dense and a MoE family in both
+    KV dtypes.  Exactly one prefill and one decode program either way."""
+    cold, warm, cold_out, warm_out = _engine_case(
+        arch, kv_dtype, f"{arch[:4]}-{kv_dtype}")
+    assert cold_out == warm_out
+    s = warm.stats()
+    assert s["prefix_hit_rate"] > 0 and s["prefix_pages_reused"] >= 4
+    for eng in (cold, warm):
+        assert eng._prefill_jit._cache_size() == 1
+        assert eng._burst_jit._cache_size() == 1
+
+
+def test_identity_survives_eviction_pressure():
+    """Two alternating 3-page prefix chains contend for a 4-page pool:
+    every switch evicts the other chain leaf-first, but the surviving
+    root page still re-hits.  Reuse degrades under pressure but never
+    corrupts — outputs stay identical to cold."""
+    cfg = get_config("yi-6b", smoke=True)
+    cfg = dataclasses.replace(cfg, name=cfg.name + "-pfx-evict")
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    prefixes = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(40 + p), (3 * PAGE,), 0, cfg.vocab_size))
+        for p in range(2)]
+
+    def requests():
+        return [Request(uid=i, tokens=np.concatenate(
+            [prefixes[i % 2], np.asarray(jax.random.randint(
+                jax.random.PRNGKey(100 + i), (4,), 0, cfg.vocab_size))]),
+            max_new=4) for i in range(6)]
+
+    kw = dict(n_slots=2, cache_len=48, page_len=PAGE, steps_per_tick=4)
+    outs = {}
+    for mode in ("cold", "warm"):
+        eng = ServeEngine(cfg, params, prefix_cache=(mode == "warm"),
+                          prefix_pool_pages=4, **kw)
+        res = []
+        for r in requests():           # sequential: full drain per request
+            eng.submit(r)
+            res += eng.run()
+            eng.results.clear()
+        outs[mode] = {r.uid: r.tokens for r in res}
+        if mode == "warm":
+            s = eng.stats()
+            assert s["prefix_evictions"] > 0
+            assert s["prefix_pool_used"] <= 4
+            assert s["prefix_pages_reused"] > 0
+    assert outs["cold"] == outs["warm"]
+
+
+def test_prefix_cache_rejects_unpaged_families():
+    cfg = get_config("recurrentgemma-2b", smoke=True)
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="paged KV"):
+        ServeEngine(cfg, params, prefix_cache=True)
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "rwkv6-7b"])
+def test_int8_kv_rejected_for_stateful_families(arch):
+    cfg = dataclasses.replace(get_config(arch, smoke=True),
+                              kv_dtype="int8")
+    model = get_model(cfg)
+    with pytest.raises(ValueError):
+        model.init_slots(cfg, 2, 32)
+
+
+def test_kv_byte_model_matches_live_state():
+    """launch/roofline's capacity model equals jax.Array.nbytes of the
+    engine state for both dtypes, and int8 fits >= 1.7x slots in the
+    bf16 budget once E = n_kv_heads * head_dim is large enough."""
+    from repro.launch.roofline import (kv_cache_slot_bytes,
+                                      kv_slots_at_budget)
+
+    cfg = get_config("yi-6b", smoke=True)
+    cfg = dataclasses.replace(cfg, name=cfg.name + "-pfx-bytes",
+                              head_dim=32)
+    model = get_model(cfg)
+    C = 64
+    for kvd in ("bf16", "int8"):
+        c = dataclasses.replace(cfg, kv_dtype=kvd)
+        state = get_model(c).init_slots(c, 3, C)
+        measured = sum(l.nbytes for l in jax.tree.leaves(state))
+        assert measured == 3 * kv_cache_slot_bytes(c, C)
+    budget = 4 * kv_cache_slot_bytes(cfg, C, kv_dtype="bf16")
+    assert kv_slots_at_budget(cfg, C, budget, kv_dtype="int8") >= 7
+    del model
