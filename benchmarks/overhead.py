@@ -88,6 +88,30 @@ def main(quick=False):
         csv_line(f"overhead.{opt}", t_step * 1e6,
                  ";".join(f"{k2}={v:.2f}" for k2, v in row.items()))
 
+    # comm/compute split: the trainer's in-graph telemetry (dataflow-ordered
+    # host stamps around every compression bucket, distributed/overlap.py).
+    # On one device the window covers the local quantize pipeline; under a
+    # mesh the same metrics cover the collective window — the differential
+    # exposed-comm benchmark lives in benchmarks/comm_overlap.py.
+    tc = TrainerConfig(optimizer="sophia_g", peak_lr=1e-3, total_steps=1000,
+                       hess_subbatch=4, hess_interval=10,
+                       compress_grads=True, comm_telemetry=True)
+    init_fn, step = make_train_fns(cfg, tc)
+    state = init_fn(jax.random.PRNGKey(0))
+    jstep = jax.jit(step)
+    tele = []
+    for _ in range(3):
+        state, metrics = jstep(state, batch, off)
+        jax.block_until_ready(metrics)
+        tele.append({k: float(metrics[k]) for k in
+                     ("comm_seconds", "step_seconds",
+                      "exposed_comm_fraction")})
+    med = {k: float(np.median([r[k] for r in tele])) for k in tele[0]}
+    csv_line("overhead.comm_telemetry", med["comm_seconds"] * 1e6,
+             f"step_ms={med['step_seconds'] * 1e3:.2f};"
+             f"exposed_frac={med['exposed_comm_fraction']:.3f}")
+    results["comm_telemetry"] = med
+
     # memory: Sophia state count == AdamW state count (m,h vs m,v), both
     # living as block-padded flat shards
     tc = TrainerConfig(optimizer="sophia_g", peak_lr=1e-3, total_steps=10)

@@ -94,6 +94,16 @@ class ShardLayout:
     def n_params(self) -> int:
         return sum(self.shard_used)
 
+    def bucket_slices(self, bucket_elems: int, *,
+                      align: int = 256) -> Tuple[Tuple[Tuple[int, int], ...],
+                                                 ...]:
+        """Per-shard bucket views (see :func:`bucket_slices`): the static
+        slice table the bucketed compressed all-reduce
+        (distributed/overlap.py) iterates, one tuple of (start, stop)
+        pairs per flat shard."""
+        return tuple(bucket_slices(int(n), bucket_elems, align=align)
+                     for n in self.shard_sizes)
+
     def manifest(self) -> dict:
         """JSON-serializable summary (stored in checkpoint manifests)."""
         return {
@@ -106,6 +116,29 @@ class ShardLayout:
                                    self.shard_used)
             ],
         }
+
+
+def bucket_slices(n: int, bucket_elems: int, *,
+                  align: int = 256) -> Tuple[Tuple[int, int], ...]:
+    """Static (start, stop) views partitioning a flat shard into buckets.
+
+    ``bucket_elems`` is rounded up to a multiple of ``align`` (the
+    quantization scale block, possibly multiplied by the collective axis
+    size so per-device segments stay block-aligned); the last bucket takes
+    the remainder.  ``bucket_elems <= 0`` means one bucket — the monolithic
+    view.  Every boundary is a multiple of ``align``, which is what keeps
+    bucketed quantization bit-identical to whole-shard quantization: the
+    per-256-block scales and the (seed, global element index) rounding hash
+    never see the bucket structure (distributed/overlap.py)."""
+    if n <= 0:
+        return ()
+    if bucket_elems <= 0 or bucket_elems >= n:
+        return ((0, n),)
+    b = -(-bucket_elems // align) * align
+    if b <= 0 or n % align != 0:
+        return ((0, n),)
+    edges = list(range(0, n, b)) + [n]
+    return tuple((edges[i], edges[i + 1]) for i in range(len(edges) - 1))
 
 
 def build_layout(params: PyTree, *, block: int = BLOCK) -> ShardLayout:

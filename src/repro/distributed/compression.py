@@ -61,8 +61,25 @@ class CompressionState(NamedTuple):
 
 
 class FlatCompressionState(NamedTuple):
-    """Error feedback over the engine's flat gradient shards: one fp32
-    buffer per shard, same (padded) length, sharded over the fsdp axis."""
+    """Error feedback over the engine's flat gradient shards.
+
+    Layout: ONE flat fp32 buffer per engine shard, the shard's full padded
+    length, sharded over the fsdp axis exactly like the engine's m/h shards
+    (``flat_shard_spec``).  The buffer is indexed by *global element index*
+    within the shard — the same coordinate system the quantization noise
+    hash and the per-256-block scales use.
+
+    The bucketed overlapped path (``distributed/overlap.py``) does NOT add
+    bucket structure to this state: each bucket's error feedback is a
+    disjoint, 256-block-aligned **view** of the same flat buffer —
+    ``error[i][start:stop]`` mesh-less, or the device-major column slice
+    ``error[i].reshape(ndev, seg)[:, start//ndev:stop//ndev]`` under a
+    mesh (comm-free on ``P(fsdp)``-sharded buffers) — read and written in
+    place by that bucket's collective.  Because views tile the buffer
+    exactly, the bucketed and monolithic paths share one state layout —
+    checkpoints, donation, re-sharding and ``TrainState.comp_state`` are
+    identical whichever path produced them, and switching bucket sizes
+    mid-run (or between save and restore) is always legal."""
 
     error: Tuple[jnp.ndarray, ...]
 
@@ -89,38 +106,36 @@ class GradCompressor:
                      for n in layout.shard_sizes)
 
     def allreduce_shards(self, g_shards, state: FlatCompressionState, rng, *,
-                         mesh=None, axis=None
+                         mesh=None, axis=None,
+                         bucket_elems: Optional[int] = None,
+                         telemetry: bool = False
                          ) -> tuple[Tuple[jnp.ndarray, ...],
                                     FlatCompressionState]:
         """Compressed data-parallel reduction over flat gradient shards.
 
-        With a mesh carrying the fsdp axis, each shard runs through a
-        ``shard_map``: the device's reduced segment (+ its error-feedback
-        segment) is quantized to int8 + per-block scales, the int8/scale
-        representation is gathered across the axis (equivalently: a psum of
-        the zero-padded per-device segments — disjoint supports make the
-        sum a gather), and dequantized on the far side.  Without a mesh (or
-        when the axis doesn't divide the shard into block-aligned segments)
-        the identical math runs on the whole shard locally, so enabling a
-        mesh never changes the training trajectory.
+        With a mesh carrying the fsdp axis, each shard runs through one
+        ``shard_map`` **per bucket** (a 256-block-aligned slice of the
+        shard): XLA ring reduce-scatters the bucket's fp32 gradient to feed
+        the shard_map, the device's reduced segment (+ its error-feedback
+        view) is quantized to int8 + per-block scales, the int8/scale
+        representation is gathered across the axis — the bytes on the wire
+        — and dequantized on the far side.  Bucketing bounds the peak comm
+        buffer at O(bucket) instead of O(shard) and gives the latency-
+        hiding scheduler independent per-bucket collective chains to
+        overlap with compute (distributed/overlap.py); ``bucket_elems``
+        None picks the roofline bucket size, 0 forces the monolithic
+        single-bucket path, and any value is bit-identical to any other
+        because quantization is keyed on the global element index only.
+
+        Without a mesh (or when the axis doesn't divide a bucket into
+        block-aligned segments) the identical math runs locally, so
+        enabling a mesh never changes the training trajectory.
         """
-        if mesh is None:
-            from .sharding import activation_mesh
-            mesh = activation_mesh()
-        if axis is None and mesh is not None:
-            from .sharding import fsdp_axis
-            axis = fsdp_axis(mesh)
-        seed = _as_seed(rng)
-        out_g, out_e = [], []
-        for i, (g, e) in enumerate(zip(g_shards, state.error)):
-            # rng None selects deterministic round-to-nearest (see
-            # _quantize) — preserve it instead of xor-ing into a crash
-            sseed = None if seed is None else \
-                seed ^ jnp.uint32((_GOLDEN * (i + 1)) & 0xFFFFFFFF)
-            deq, err = self._allreduce_one(g, e, sseed, mesh, axis)
-            out_g.append(deq)
-            out_e.append(err)
-        return tuple(out_g), FlatCompressionState(error=tuple(out_e))
+        from .overlap import allreduce_shards_bucketed
+        return allreduce_shards_bucketed(self, g_shards, state, rng,
+                                         mesh=mesh, axis=axis,
+                                         bucket_elems=bucket_elems,
+                                         telemetry=telemetry)
 
     def allreduce_shards_stateless(self, g_shards, rng, *, mesh=None,
                                    axis=None) -> Tuple[jnp.ndarray, ...]:
@@ -139,22 +154,37 @@ class GradCompressor:
                                        axis=axis)
         return deq
 
-    def _allreduce_one(self, g, e, seed, mesh, axis):
+    def _allreduce_one(self, g, e, seed, mesh, axis, *, offset: int = 0,
+                       stride: Optional[int] = None):
+        """One bucket (or whole shard) through the in-collective pipeline.
+
+        ``offset`` and ``stride`` locate this bucket's elements in the
+        GLOBAL flat-shard coordinate system that keys the stochastic-
+        rounding hash and the per-256-block scales (never the math): the
+        device at combined mesh index ``idx`` quantizes global elements
+        ``offset + idx * stride + [0, n/ndev)``.  ``stride`` defaults to
+        this call's own per-device segment (contiguous bucket — PR 2's
+        monolithic layout); the device-major bucketed path
+        (distributed/overlap.py) passes ``stride = whole-shard segment``
+        so its interleaved buckets still hash the true global index.  Any
+        256-aligned bucketing therefore dequantizes bit-identically to the
+        monolithic whole-shard call."""
         n = g.shape[0]
         axes = (axis,) if isinstance(axis, str) else tuple(axis or ())
         ndev = (int(np.prod([mesh.shape[a] for a in axes]))
                 if (mesh is not None and axes) else 1)
         if ndev <= 1 or n % (ndev * self.block) != 0:
             # mesh-less (tests, single host) or segments would straddle a
-            # scale block: same math, whole shard, offset 0
+            # scale block: same math, whole bucket, global offset
             x = g.astype(jnp.float32) + e
-            _, _, deq = _quantize(x, self.block, seed)
+            _, _, deq = _quantize(x, self.block, seed, offset=offset)
             return deq, x - deq
 
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
         block, seg = self.block, n // ndev
+        stride = seg if stride is None else stride
 
         def body(g_seg, e_seg, sd):
             # combined (major-to-minor) index along the composite fsdp axis
@@ -164,7 +194,7 @@ class GradCompressor:
             x = g_seg.astype(jnp.float32) + e_seg
             q, scale, deq = _quantize(x, block,
                                       None if seed is None else sd,
-                                      offset=idx * seg)
+                                      offset=offset + idx * stride)
             # int8 payload + fp32 scales are what cross the wire
             q_all = jax.lax.all_gather(q.reshape(-1), axes[0] if
                                        len(axes) == 1 else axes, tiled=True)

@@ -1,10 +1,12 @@
-"""Production meshes.
+"""Production meshes, multi-host initialization, and scheduler flags.
 
 Defined as FUNCTIONS (never module-level constants) so importing this module
 never touches jax device state — the dry-run must set XLA_FLAGS before the
 first jax device query.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -18,6 +20,70 @@ def _mesh_kwargs(n_axes: int) -> dict:
     if AxisType is None:
         return {}
     return {"axis_types": (AxisType.Auto,) * n_axes}
+
+
+def latency_hiding_flags(platform: str) -> tuple:
+    """XLA flags that let the scheduler overlap the bucketed gradient
+    collectives (distributed/overlap.py) with backward compute.
+
+    Keyed on platform because XLA treats *unknown* flags as fatal — a
+    ``--xla_tpu_*`` flag crashes a CPU-only build at first compile.  CPU
+    gets the empty set: the thunk runtime already executes independent
+    per-bucket collective chains concurrently with compute, no flag
+    needed."""
+    if platform == "tpu":
+        return (
+            "--xla_tpu_enable_latency_hiding_scheduler=true",
+            "--xla_tpu_enable_async_collective_fusion=true",
+            "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+            "--xla_tpu_overlap_compute_collective_tc=true",
+        )
+    if platform == "gpu":
+        return ("--xla_gpu_enable_latency_hiding_scheduler=true",)
+    return ()
+
+
+def enable_latency_hiding(platform: str = "tpu") -> bool:
+    """Append :func:`latency_hiding_flags` to ``XLA_FLAGS`` in the
+    environment.  Must run before the first jax device query (same rule as
+    the dry-run); flags already present are not duplicated.  Returns True
+    if the environment changed."""
+    flags = [f for f in latency_hiding_flags(platform)
+             if f not in os.environ.get("XLA_FLAGS", "")]
+    if not flags:
+        return False
+    prior = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = (prior + " " + " ".join(flags)).strip()
+    return True
+
+
+def initialize_distributed(coordinator: str, num_processes: int,
+                           process_id: int) -> None:
+    """Multi-process jax runtime init (idempotent-ish: call once, before
+    any jax device use).
+
+    On CPU the default collectives implementation cannot cross processes;
+    gloo can, and must be selected *before* ``jax.distributed.initialize``
+    touches the backend.  Platform detection is env-only
+    (``JAX_PLATFORMS``) because querying the backend here would initialize
+    it pre-distributed — the exact bug this helper exists to prevent.  The
+    2-process localhost tier (tests/test_multiprocess.py) runs this path."""
+    if os.environ.get("JAX_PLATFORMS", "").startswith("cpu"):
+        try:
+            jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        except Exception:  # pragma: no cover - older jax: option absent
+            pass
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+
+
+def make_host_spanning_mesh(shape, axes):
+    """Mesh over ALL global devices (every process's), for multi-host
+    data parallelism.  Identical to :func:`make_mesh` on one process —
+    ``jax.devices()`` is the global list either way — but kept as a named
+    entry point so call sites document their multi-host intent."""
+    return make_mesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

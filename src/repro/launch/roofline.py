@@ -63,8 +63,10 @@ def _shape_bytes(type_str: str) -> int:
     return total
 
 
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Sum operand bytes per collective kind from compiled HLO text."""
+def _iter_collectives(hlo_text: str):
+    """Yield ``(kind, result_dtype, operand_bytes)`` per collective
+    instruction in compiled HLO text (async ``-start`` counted once,
+    ``-done`` skipped)."""
     sizes: Dict[str, int] = {}
     lines = hlo_text.splitlines()
     for line in lines:
@@ -73,8 +75,6 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
             name, type_str, _op = m.groups()
             sizes[name] = _shape_bytes(type_str)
 
-    out = {k: 0 for k in _COLLECTIVES}
-    out["total"] = 0
     for line in lines:
         m = _INSTR_RE.match(line)
         if not m:
@@ -104,8 +104,30 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
         b = sum(sizes.get(n, 0) for n in operand_names)
         if b == 0:
             b = _shape_bytes(type_str)  # fallback: result size
+        dm = _SHAPE_RE.search(type_str)
+        yield kind, (dm.group(1) if dm else "?"), b
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from compiled HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["total"] = 0
+    for kind, _dtype, b in _iter_collectives(hlo_text):
         out[kind] += b
         out["total"] += b
+    return out
+
+
+def collective_buffer_bytes(hlo_text: str) -> Dict[str, Dict[str, int]]:
+    """MAX single-instruction operand bytes per (collective kind, result
+    dtype) — the peak-comm-buffer audit for the bucketed reduction: the
+    int8 gradient gather shows up as ``["all-gather"]["s8"]``, and
+    bucketing must cap it at O(bucket) instead of O(shard) while the fp32
+    params/FSDP gathers (f32/bf16 dtypes) stay untouched."""
+    out: Dict[str, Dict[str, int]] = {}
+    for kind, dtype, b in _iter_collectives(hlo_text):
+        d = out.setdefault(kind, {})
+        d[dtype] = max(d.get(dtype, 0), b)
     return out
 
 
@@ -169,6 +191,107 @@ def kv_slots_at_budget(cfg, cache_len: int, hbm_budget_bytes: int,
     """Concurrent slots a fixed HBM budget sustains for the KV cache."""
     return int(hbm_budget_bytes
                // kv_cache_slot_bytes(cfg, cache_len, kv_dtype=kv_dtype))
+
+
+# ---------------------------------------------------------------------------
+# gradient-collective bucket model (distributed/overlap.py)
+
+#: fixed per-collective cost — dispatch + ring latency — that dominates
+#: tiny buckets.  ~10us is the TPU-generation ICI ballpark; the value only
+#: has to be the right order of magnitude to keep the bucket chooser away
+#: from the latency-bound regime.
+COLLECTIVE_LAUNCH_S = 10e-6
+
+#: how many buckets the overlap scheduler wants in flight per shard: more
+#: buckets = finer backward/comm interleaving, fewer = less launch overhead.
+TARGET_OVERLAP_BUCKETS = 8
+
+
+def ring_collective_seconds(nbytes: int, ndev: int, *,
+                            bw: float = ICI_BW,
+                            launch: float = COLLECTIVE_LAUNCH_S) -> float:
+    """Ring reduce-scatter + all-gather time for ``nbytes`` of payload:
+    each phase moves ``(ndev-1)/ndev * nbytes`` per link."""
+    if ndev <= 1:
+        return 0.0
+    return launch + 2.0 * (ndev - 1) / ndev * nbytes / bw
+
+
+def ring_phase_seconds(nbytes: int, ndev: int, *, bw: float = ICI_BW,
+                       launch: float = COLLECTIVE_LAUNCH_S) -> float:
+    """ONE ring phase (a reduce-scatter OR an all-gather) of ``nbytes``."""
+    if ndev <= 1:
+        return 0.0
+    return launch + (ndev - 1) / ndev * nbytes / bw
+
+
+def exposed_comm_seconds(bucket_elems_list, ndev: int,
+                         compute_budget_s: float, *, block: int = 256,
+                         bw: float = ICI_BW,
+                         launch: float = COLLECTIVE_LAUNCH_S) -> float:
+    """Event-driven exposed-comm model for a gradient bucket schedule.
+
+    The compressed reduction of bucket ``j`` (fp32 ring reduce-scatter,
+    then int8+scales ring all-gather) is enqueued on a single comm channel
+    the moment its slice of the backward pass has been produced — XLA
+    rewrites slice-of-concatenate to the contributing operands, so bucket
+    ``j``'s collective chain really does depend on only a suffix of the
+    backward, modeled here as ready at ``compute_budget_s * (j+1) / B``.
+    Exposed comm is whatever the channel still owes once compute is done:
+
+        exposed  =  max(0, channel_finish - compute_budget_s)
+
+    The monolithic schedule is the 1-bucket case: ready only when backward
+    completes, so its ENTIRE wire time is exposed — while a bucketed
+    schedule with ample compute exposes only the tail bucket's wire.  This
+    is the quantity ``benchmarks/comm_overlap.py`` reports at ICI
+    bandwidth (host CPUs serialize collectives, so wall clock cannot
+    express it); the same model gives ``choose_bucket_elems`` its launch
+    floor."""
+    buckets = [int(n) for n in bucket_elems_list]
+    B = len(buckets)
+    channel = 0.0
+    for j, n in enumerate(buckets):
+        ready = compute_budget_s * (j + 1) / B
+        wire = (ring_phase_seconds(4 * n, ndev, bw=bw, launch=launch)
+                + ring_phase_seconds(n + 4 * (-(-n // block)), ndev,
+                                     bw=bw, launch=launch))
+        channel = max(channel, ready) + wire
+    return max(0.0, channel - compute_budget_s)
+
+
+def choose_bucket_elems(total_elems: int, ndev: int, *, block: int = 256,
+                        bytes_per_elem: float = 1.0 + 4.0 / 256,
+                        target_buckets: int = TARGET_OVERLAP_BUCKETS,
+                        bw: float = ICI_BW,
+                        launch: float = COLLECTIVE_LAUNCH_S) -> int:
+    """Bucket size (elements) for the bucketed compressed all-reduce.
+
+    Two pressures, both from the ring model above:
+
+      * overlap granularity wants MANY buckets — the first bucket's
+        collective can only hide behind the backward compute of the buckets
+        still being produced, so per-shard we aim for
+        ``TARGET_OVERLAP_BUCKETS``;
+      * launch overhead wants FEW — a bucket whose wire time is dominated
+        by ``COLLECTIVE_LAUNCH_S`` burns link time on latency, so the
+        bucket floor is the size at which launch is <= 10% of wire time.
+
+    ``bytes_per_elem`` defaults to the int8-plus-scales wire format
+    (``1 + 4/256``).  The result is rounded to a multiple of
+    ``block * ndev`` so per-device segments stay aligned with the
+    quantization scale blocks (the device-count-invariance requirement)."""
+    align = block * max(1, ndev)
+    if total_elems <= align:
+        return total_elems
+    # floor: launch <= 10% of the bucket's ring wire time
+    wire_bw = bw / max(1, 2 * (ndev - 1)) * max(1, ndev) if ndev > 1 else bw
+    floor_bytes = 10.0 * launch * wire_bw
+    floor_elems = int(floor_bytes / bytes_per_elem)
+    want = max(floor_elems, total_elems // max(1, target_buckets))
+    want = min(want, total_elems)
+    b = -(-want // align) * align
+    return min(b, total_elems)
 
 
 def model_flops_train(n_params_active: int, tokens: int) -> float:

@@ -1,8 +1,19 @@
-"""Production training driver — elastic.
+"""Production training driver — elastic, multi-host.
 
     PYTHONPATH=src python -m repro.launch.train --arch gpt2-small \
         --opt sophia_g --steps 400 --global-batch 32 --seq-len 256 \
         --ckpt-dir /tmp/run1 --elastic
+
+Multi-host: launch the SAME command on every host, adding
+
+    --coordinator host0:1234 --num-processes N --process-id <rank>
+
+``jax.distributed`` initializes before any device query, the auto mesh
+spans every process's devices, checkpoint save/restore is collective
+(process 0 writes, manifests cross-validated), and a dead peer surfaces as
+``NodeLoss``: the survivors exit non-zero, get relaunched with
+``--num-processes`` = the surviving count, and resume from the last
+complete manifest.
 
 Features: any registered arch (--smoke for the reduced config), any
 optimizer, sharded execution over all visible devices (mesh auto-shaped),
@@ -16,23 +27,30 @@ persistent straggler degrades capacity instead of killing the run.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
+import numpy as np
+
+from ..configs import ARCHS, get_config
+
+# NOTE: jax is imported lazily-at-top but devices must not be touched until
+# main() has had the chance to run jax.distributed.initialize
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from ..configs import ARCHS, get_config
 from ..data import DataConfig, make_source
 from ..distributed.sharding import (batch_specs, partition_params,
                                     set_activation_mesh)
 from ..train import TrainerConfig, checkpoint as ckpt, make_engine, \
     make_train_fns
-from ..train.elastic import (MeshDegraded, PreemptionGuard, StragglerDetector,
+from ..train.elastic import (MeshDegraded, NodeLoss, PreemptionGuard,
+                             StragglerDetector, is_distributed_failure,
                              run_resumable)
 from ..train.train_state import state_partition_specs
-from .mesh import make_mesh
+from .mesh import enable_latency_hiding, initialize_distributed, make_mesh
 
 
 def build_mesh(devices=None):
@@ -52,6 +70,24 @@ def build_mesh(devices=None):
             model = m
             break
     return make_mesh((n // model, model), ("data", "model"), devices=devs)
+
+
+def _put_tree(tree, sh_tree):
+    """device_put a host pytree against target shardings.  Shardings that
+    span other processes' devices (multi-host) need
+    ``make_array_from_callback`` — every process holds the identical global
+    host value (deterministic init / stateless data pipeline) and
+    contributes its addressable slices."""
+    if sh_tree is None:
+        return tree
+
+    def put(x, s):
+        if getattr(s, "is_fully_addressable", True):
+            return jax.device_put(x, s)
+        x = np.asarray(x)
+        return jax.make_array_from_callback(x.shape, s, lambda idx: x[idx])
+
+    return jax.tree.map(put, tree, sh_tree)
 
 
 def _final_save(ckpt_dir, step, state, extra):
@@ -125,6 +161,19 @@ def main(argv=None):
                          "on-disk cache; see README 'Fused loss')")
     ap.add_argument("--compress-grads", action="store_true",
                     help="in-collective int8 all-reduce over the fsdp axis")
+    ap.add_argument("--comm-bucket-elems", type=int, default=None,
+                    help="bucket size (elements) for the bucketed, "
+                         "backward-overlapped gradient collective "
+                         "(distributed/overlap.py): unset=auto (roofline), "
+                         "0=monolithic, N=explicit")
+    ap.add_argument("--comm-telemetry", action="store_true",
+                    help="per-step comm/compute host stamps: logs "
+                         "comm_seconds and exposed_comm_fraction")
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port of process 0; presence turns on "
+                         "multi-process jax.distributed")
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
     ap.add_argument("--compress-hess", action="store_true",
                     help="int8-compress the estimator sub-batch gradient "
                          "too (stateless: no error feedback at refresh "
@@ -149,6 +198,15 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    # MUST precede every jax device query: scheduler flags only apply at
+    # backend init, and distributed init after a device query deadlocks
+    enable_latency_hiding(
+        (os.environ.get("JAX_PLATFORMS") or "tpu").split(",")[0])
+    if args.coordinator:
+        initialize_distributed(args.coordinator, args.num_processes,
+                               args.process_id)
+    p0 = jax.process_index() == 0
+
     cfg = get_config(args.arch, smoke=args.smoke)
     tc = TrainerConfig(
         optimizer=args.opt, estimator=args.estimator, peak_lr=args.peak_lr,
@@ -159,6 +217,8 @@ def main(argv=None):
         fused_kernel=args.fused_kernel, fused_loss=args.fused_loss,
         compress_grads=args.compress_grads,
         compress_hess=args.compress_hess,
+        comm_bucket_elems=args.comm_bucket_elems,
+        comm_telemetry=args.comm_telemetry,
         state_dtype=args.state_dtype, seed=args.seed)
     if args.retune and tc.fused_loss:
         # eager measured tuning for this run's exact hot-path loss shape;
@@ -172,9 +232,10 @@ def main(argv=None):
             transpose_w=not cfg.tie_embeddings,
             softcap=cfg.final_logit_softcap, norm=cfg.norm_type,
             refresh=True)
-        print(f"[retune] fused CE {n_rows}x{cfg.d_model}x"
-              f"{cfg.padded_vocab}: bn={tuned.bn} bv={tuned.bv} "
-              f"schedule={tuned.schedule} ({tuned.source})")
+        if p0:
+            print(f"[retune] fused CE {n_rows}x{cfg.d_model}x"
+                  f"{cfg.padded_vocab}: bn={tuned.bn} bv={tuned.bv} "
+                  f"schedule={tuned.schedule} ({tuned.source})")
     src = make_source(DataConfig(
         seq_len=args.seq_len, global_batch=args.global_batch,
         vocab_size=cfg.vocab_size, seed=args.seed, source=args.data,
@@ -214,9 +275,7 @@ def main(argv=None):
     def make_state():
         setup()
         state = ctx["init_fn"](jax.random.PRNGKey(args.seed))
-        if ctx["ssh"] is not None:
-            state = jax.device_put(state, ctx["ssh"])
-        return state
+        return _put_tree(state, ctx["ssh"])
 
     def restore_latest():
         if not args.ckpt_dir or ckpt.latest_step(args.ckpt_dir) is None:
@@ -238,8 +297,10 @@ def main(argv=None):
         state, start = ckpt.restore_resharded(
             args.ckpt_dir, state_shape, shardings=ctx["ssh"],
             expect_layout=layout_meta)
-        print(f"[resume] restored step {start} from {args.ckpt_dir} onto "
-              f"{len(ctx['devices'])} device(s)")
+        if p0:
+            print(f"[resume] restored step {start} from {args.ckpt_dir} "
+                  f"onto {len(ctx['devices'])} device(s) / "
+                  f"{jax.process_count()} process(es)")
         return state, start
 
     guard = PreemptionGuard()
@@ -253,17 +314,31 @@ def main(argv=None):
         t_start = time.time()
         for t in range(start, args.steps):
             t0 = time.time()
-            batch = {k: jnp.asarray(v) for k, v in src.batch_at(t).items()}
-            if ctx["bsh"] is not None:
-                batch = jax.device_put(batch, ctx["bsh"])
+            # every process computes the identical global batch (stateless
+            # deterministic source) and contributes its addressable slices
+            batch = _put_tree(
+                {k: jnp.asarray(v) for k, v in src.batch_at(t).items()},
+                ctx["bsh"])
             flag = jnp.asarray(needs_hess and t % tc.hess_interval == 0)
-            state, metrics = ctx["sjit"](state, batch, flag)
+            try:
+                state, metrics = ctx["sjit"](state, batch, flag)
+            except Exception as e:
+                if jax.process_count() > 1 and is_distributed_failure(e):
+                    # a peer died: unrecoverable in-process — propagate as
+                    # NodeLoss so run_resumable exits instead of retrying
+                    # into a hang; the relauncher resumes the survivors
+                    # from the last manifest
+                    raise NodeLoss(
+                        f"distributed failure at step {t}: {e}") from e
+                raise
             dt = time.time() - t0
             if straggler.observe(dt):
-                print(f"[straggler] step {t} took {dt:.2f}s "
-                      f"(mean {straggler.mean:.2f}s)")
+                if p0:
+                    print(f"[straggler] step {t} took {dt:.2f}s "
+                          f"(mean {straggler.mean:.2f}s)")
                 if (args.elastic and args.degrade_after and args.ckpt_dir
                         and straggler.flagged >= args.degrade_after
+                        and jax.process_count() == 1
                         and len(ctx["devices"]) > 1):
                     # checkpoint -> shrink mesh -> resume: drop the slow
                     # half of the device set and let run_resumable restore
@@ -274,24 +349,32 @@ def main(argv=None):
                     raise MeshDegraded(
                         f"persistent straggler at step {t}; degrading to "
                         f"{len(ctx['devices'])} device(s)")
-            if t % args.log_every == 0:
+            if t % args.log_every == 0 and p0:
                 loss = float(metrics["loss"])
+                comm = ""
+                if "comm_seconds" in metrics:
+                    cs = float(metrics["comm_seconds"]) * 1e3
+                    cf = float(metrics["exposed_comm_fraction"]) * 100
+                    comm = f" comm {cs:.1f}ms ({cf:.0f}% of step)"
                 print(f"step {t:6d} loss {loss:.4f} "
                       f"gnorm {float(metrics['grad_norm']):.3f} "
-                      f"{dt * 1e3:.0f}ms", flush=True)
+                      f"{dt * 1e3:.0f}ms{comm}", flush=True)
             if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
                 ckpt.save(args.ckpt_dir, t + 1, state, async_=True,
                           extra=layout_meta)
             if guard.requested:
-                print(f"[preempt] checkpointing at step {t + 1} and exiting")
+                if p0:
+                    print(f"[preempt] checkpointing at step {t + 1} "
+                          "and exiting")
                 if args.ckpt_dir:
                     _final_save(args.ckpt_dir, t + 1, state, layout_meta)
                 return state
         if args.ckpt_dir:
             _final_save(args.ckpt_dir, args.steps, state, layout_meta)
-        print(f"done: {args.steps - start} steps in "
-              f"{time.time() - t_start:.1f}s "
-              f"(straggler flags: {straggler.flagged})")
+        if p0:
+            print(f"done: {args.steps - start} steps in "
+                  f"{time.time() - t_start:.1f}s "
+                  f"(straggler flags: {straggler.flagged})")
         return state
 
     max_restarts = args.max_restarts if args.max_restarts is not None \

@@ -15,9 +15,25 @@ Format: one directory per step —
   device_put against the new NamedShardings;
 * restore also returns the step, and the stateless data pipeline
   (data/pipeline.py) makes mid-run resume exact.
+
+Multi-process (``jax.distributed``) rules, all no-ops at process_count==1:
+
+* the device->host snapshot is COLLECTIVE — non-fully-addressable leaves
+  are materialized via ``process_allgather``, so every process must call
+  ``save`` together — but only process 0 writes files (writes are forced
+  synchronous: an async thread racing the cross-process barrier could
+  publish a half-written step to peers);
+* ``restore`` builds leaves with ``jax.make_array_from_callback`` when the
+  target sharding spans non-addressable devices (plain device_put only
+  works process-locally);
+* ``restore_resharded`` barriers first (process 0's rename must be
+  visible) and then cross-validates the manifest digest across processes —
+  two processes silently restoring *different* steps (skewed filesystems,
+  a stale NFS cache) would otherwise train a frankenstate.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -77,15 +93,37 @@ def _write(tree_np, step: int, ckpt_dir: str, extra: Optional[dict] = None):
 _pending: list = []
 
 
+def _sync(tag: str) -> None:
+    """Cross-process barrier (no-op single-process)."""
+    if jax.process_count() > 1:
+        from jax.experimental import multihost_utils
+        multihost_utils.sync_global_devices(f"ckpt_{tag}")
+
+
+def _host_leaf(x):
+    """Device -> host for one leaf.  Non-fully-addressable leaves (multi-
+    process shardings) are gathered collectively: process_allgather returns
+    the fully-replicated global value on every process."""
+    if isinstance(x, jax.Array) and not x.is_fully_addressable:
+        from jax.experimental import multihost_utils
+        return np.asarray(multihost_utils.process_allgather(x))
+    return np.asarray(jax.device_get(x))
+
+
 def save(ckpt_dir: str, step: int, state: PyTree, *, async_: bool = False,
          keep: int = 3, extra: Optional[dict] = None) -> None:
     """Snapshot ``state`` (device -> host) and persist it.
 
     ``extra`` is a JSON-serializable dict stored in the manifest (the
-    launcher records the engine's flat-shard layout here)."""
+    launcher records the engine's flat-shard layout here).  Multi-process:
+    collective — call on every process; process 0 writes, synchronously."""
+    multiproc = jax.process_count() > 1
+    tree_np = jax.tree.map(_host_leaf, state)
+    if multiproc and jax.process_index() != 0:
+        _sync("save")  # pairs with process 0's post-write barrier
+        return
     os.makedirs(ckpt_dir, exist_ok=True)
-    tree_np = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
-    if async_:
+    if async_ and not multiproc:
         t = threading.Thread(target=_write,
                              args=(tree_np, step, ckpt_dir, extra),
                              daemon=True)
@@ -94,6 +132,8 @@ def save(ckpt_dir: str, step: int, state: PyTree, *, async_: bool = False,
     else:
         _write(tree_np, step, ckpt_dir, extra)
     _gc(ckpt_dir, keep)
+    if multiproc:
+        _sync("save")
 
 
 def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> dict:
@@ -137,6 +177,29 @@ def _check_layout(recorded: dict, expected: dict) -> None:
                 f"use a fresh ckpt dir)")
 
 
+def manifest_digest(ckpt_dir: str, step: Optional[int] = None) -> str:
+    """Content digest of a checkpoint's manifest — the cross-process
+    agreement token: two processes restoring the same step from the same
+    bytes produce the same digest."""
+    blob = json.dumps(read_manifest(ckpt_dir, step), sort_keys=True).encode()
+    return hashlib.sha1(blob).hexdigest()
+
+
+def _validate_digest_cross_process(digest_hex: str) -> None:
+    """Assert every process resolved the SAME manifest (no-op at
+    process_count==1)."""
+    if jax.process_count() <= 1:
+        return
+    from jax.experimental import multihost_utils
+    local = np.frombuffer(bytes.fromhex(digest_hex), dtype=np.uint8)
+    gathered = np.asarray(multihost_utils.process_allgather(local))
+    if not (gathered == gathered[0]).all():
+        raise ValueError(
+            "checkpoint manifest differs across processes — processes "
+            "would restore different checkpoints (skewed filesystem?); "
+            f"local digest {digest_hex}")
+
+
 def restore_resharded(ckpt_dir: str, like: PyTree, *,
                       shardings: Optional[PyTree] = None,
                       expect_layout: Optional[dict] = None,
@@ -149,8 +212,12 @@ def restore_resharded(ckpt_dir: str, like: PyTree, *,
     any M-device mesh by device_put-ting the same buffers against the new
     mesh's NamedShardings.  ``expect_layout`` (the engine's
     ``ShardLayout.manifest()``, as recorded in the checkpoint manifest's
-    ``extra``) is verified against the recorded layout first."""
+    ``extra``) is verified against the recorded layout first.  Multi-
+    process: barriers so the writer's rename is visible, then verifies all
+    processes agree on the manifest digest before any leaf is loaded."""
+    _sync("pre_restore")
     manifest = read_manifest(ckpt_dir, step)
+    _validate_digest_cross_process(manifest_digest(ckpt_dir, manifest["step"]))
     if expect_layout is not None:
         _check_layout(manifest.get("extra") or {}, expect_layout)
     return restore(ckpt_dir, like, step=manifest["step"], shardings=shardings)
@@ -175,7 +242,16 @@ def restore(ckpt_dir: str, like: PyTree, *, step: Optional[int] = None,
               for i in range(manifest["n_leaves"])]
     if shardings is not None:
         sh_leaves = jax.tree.leaves(shardings)
-        loaded = [jax.device_put(x, s) for x, s in zip(loaded, sh_leaves)]
+
+        def put(x, s):
+            if getattr(s, "is_fully_addressable", True):
+                return jax.device_put(x, s)
+            # sharding spans other processes' devices: build the global
+            # array from the (identical-on-every-process) host value
+            return jax.make_array_from_callback(np.shape(x), s,
+                                                lambda idx: x[idx])
+
+        loaded = [put(x, s) for x, s in zip(loaded, sh_leaves)]
     else:
         loaded = [jax.numpy.asarray(x) for x in loaded]
     return jax.tree.unflatten(treedef, loaded), step

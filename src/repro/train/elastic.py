@@ -28,6 +28,46 @@ class MeshDegraded(RuntimeError):
     the surviving device set and re-shards the checkpoint onto it."""
 
 
+class NodeLoss(RuntimeError):
+    """A peer PROCESS died mid-run (multi-host ``jax.distributed``).
+
+    Unlike :class:`MeshDegraded` — an in-process mesh shrink over devices
+    this process can still see — node loss is unrecoverable in-process:
+    once a peer is gone, the distributed runtime cannot re-form a mesh
+    from inside the survivors (collectives against the dead peer hang or
+    fault, and the coordination service has lost a member).
+    ``run_resumable`` therefore RE-RAISES NodeLoss instead of retrying:
+    the process exits non-zero, the job manager relaunches the survivors
+    with ``--num-processes`` = the surviving count, and ``restore_latest``
+    resumes from the last complete manifest (validated cross-process by
+    ``checkpoint.restore_resharded``).  tests/test_multiprocess.py walks
+    exactly this relaunch-and-resume path."""
+
+
+#: substrings that mark a runtime error as a *distributed* failure — a dead
+#: or unreachable peer — rather than a local bug.  Matched case-insensitively
+#: against the message of XlaRuntimeError-shaped exceptions.
+_DISTRIBUTED_TOKENS = ("deadline", "barrier", "heartbeat", "connection",
+                       "unavailable", "peer", "broken pipe", "timed out",
+                       "timeout", "gloo", "socket", "unreachable")
+
+
+def is_distributed_failure(exc: BaseException) -> bool:
+    """True when ``exc`` looks like a lost/unreachable peer process.
+
+    Name-based (not isinstance): XlaRuntimeError's import path moved
+    across jax versions, and gRPC/gloo surface errors under several
+    types.  Tokens are deliberately broad — misclassifying a local bug as
+    NodeLoss costs one relaunch; misclassifying a dead peer as local makes
+    ``run_resumable`` retry into a hang against a ghost."""
+    name = type(exc).__name__
+    if name not in ("XlaRuntimeError", "JaxRuntimeError", "RuntimeError",
+                    "InternalError", "UnavailableError", "DeadlineExceeded"):
+        return False
+    msg = str(exc).lower()
+    return any(tok in msg for tok in _DISTRIBUTED_TOKENS)
+
+
 class StragglerDetector:
     """Flags steps whose duration deviates from the EWMA by > z_thresh
     sigma.  At scale, per-host step-time telemetry feeds this; a flagged
@@ -98,7 +138,10 @@ def run_resumable(make_state: Callable[[], object],
 
     ``MeshDegraded`` is a deliberate checkpoint-and-reconfigure request,
     not a failure: it triggers a restore without consuming the restart
-    budget.
+    budget.  ``NodeLoss`` is the opposite extreme: in-process retry cannot
+    recover a dead peer, so it propagates immediately — the relaunch (with
+    fewer processes) happens OUTSIDE this process, and the next incarnation
+    resumes via ``restore_latest``.
     """
     attempts = 0
     while True:
@@ -114,6 +157,8 @@ def run_resumable(make_state: Callable[[], object],
             return run(state, start)
         except MeshDegraded:
             continue
+        except NodeLoss:
+            raise
         except Exception:
             attempts += 1
             if attempts > max_restarts:

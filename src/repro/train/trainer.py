@@ -107,6 +107,13 @@ class TrainerConfig:
     compress_hess: bool = False        # int8 for the estimator sub-batch
     #                                    gradient too (stateless: no error
     #                                    feedback at refresh sparsity)
+    comm_bucket_elems: Optional[int] = None  # gradient-collective bucketing
+    #                                    (distributed/overlap.py): None=auto
+    #                                    (roofline; monolithic off-mesh),
+    #                                    0=monolithic, N=explicit elements
+    comm_telemetry: bool = False       # per-step comm/compute host stamps:
+    #                                    metrics gain comm_seconds /
+    #                                    step_seconds / exposed_comm_fraction
     state_dtype: str = "float32"       # optimizer m/h dtype ("bfloat16" at 400B)
     seed: int = 0
 
@@ -276,18 +283,35 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
 
     def train_step(state: TrainState, batch, do_refresh=False):
         """One unified step (Algorithm 3 lines 6-13, refresh flag-gated)."""
+        telemetry = tc.comm_telemetry
+        t_step0 = None
+        if telemetry:
+            # stamp step start on a batch leaf and thread the stamped leaf
+            # back in, so forward compute provably follows the stamp
+            from ..distributed import overlap as _ov
+            leaves, treedef = jax.tree.flatten(batch)
+            t_step0, l0 = _ov.stamp(leaves[0], 0)
+            batch = jax.tree.unflatten(treedef, [l0] + leaves[1:])
         loss, metrics, grads = _accum_grads(loss_fn, state.params, batch,
                                             tc.grad_accum)
         metrics = {"loss": loss, **metrics}
         grads, clip_state = clipper.update(grads, state.clip_state)
         g_sh = engine.ravel_grads(state.params, grads)
         comp_state = state.comp_state
+        comm_tele = None
         if compressor is not None:
             # in-collective int8 all-reduce over the flat shards: picks up
             # the fsdp axis from the launcher-installed activation mesh
-            # (mesh-less runs use the identical math on the whole shard)
-            g_sh, comp_state = compressor.allreduce_shards(
-                g_sh, comp_state, _fold_rng(state, RNG_TAG_COMPRESS))
+            # (mesh-less runs use the identical math on the whole shard);
+            # bucketed per comm_bucket_elems so the per-bucket collectives
+            # can overlap backward compute (distributed/overlap.py)
+            out = compressor.allreduce_shards(
+                g_sh, comp_state, _fold_rng(state, RNG_TAG_COMPRESS),
+                bucket_elems=tc.comm_bucket_elems, telemetry=telemetry)
+            if telemetry:
+                g_sh, comp_state, comm_tele = out
+            else:
+                g_sh, comp_state = out
         lr = schedule(state.opt_state.count)
 
         if engine.hessian_aware:
@@ -321,6 +345,21 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
                        lr=lr)
         if engine.tracks_clip_fraction:
             metrics["sophia_clip_fraction"] = opt_state.clip_fraction
+        if telemetry:
+            # step end stamped on an updated-params leaf (dataflow pins it
+            # after the optimizer write).  comm_seconds is the wall span of
+            # the comm *window* (first bucket issued -> last completed) —
+            # an upper bound on exposed comm, exact when nothing overlaps;
+            # the differential measurement lives in benchmarks/comm_overlap
+            from ..distributed import overlap as _ov
+            t_step1, _ = _ov.stamp(jax.tree.leaves(params)[0], 1)
+            step_s = _ov.delta_seconds(t_step0, t_step1)
+            comm_s = (comm_tele["comm_seconds"] if comm_tele is not None
+                      else jnp.float32(0))
+            metrics["comm_seconds"] = comm_s
+            metrics["step_seconds"] = step_s
+            metrics["exposed_comm_fraction"] = \
+                comm_s / jnp.maximum(step_s, jnp.float32(1e-9))
         return TrainState(step=state.step + 1, params=params,
                           opt_state=opt_state, clip_state=clip_state,
                           rng=state.rng, comp_state=comp_state), metrics

@@ -11,9 +11,15 @@ Modes:
                plus the compressed wire-bytes accounting per flat shard and
                the jit-cache size (the unified stepper must compile exactly
                one program per mesh even as the refresh flag flips).
+               ``--bucket-elems`` routes the compressed reduction through
+               the bucketed overlapped pipeline (distributed/overlap.py).
     elastic  — train 6 steps on an 8-device mesh, checkpoint, restore onto
                a 4-device mesh, report bit-identity of params/m/h and the
                continued loss trajectory through the next Hessian refresh.
+    hlo      — compile the 8-device train step monolithic vs bucketed and
+               report per-(kind, dtype) MAX single-collective buffer bytes:
+               the peak-comm-buffer regression audit (the int8 gather must
+               shrink from O(shard) to O(bucket)).
 """
 import os
 
@@ -49,11 +55,12 @@ STEPS = 8
 HESS_INTERVAL = 3  # refreshes at t = 0, 3, 6  ->  >= 2 full intervals
 
 
-def _tc(opt, compress, compress_hess=False):
+def _tc(opt, compress, compress_hess=False, bucket_elems=None):
     return TrainerConfig(optimizer=opt, peak_lr=1e-3, total_steps=100,
                          warmup_steps=2, hess_interval=HESS_INTERVAL,
                          hess_subbatch=4, compress_grads=compress,
-                         compress_hess=compress_hess, seed=0)
+                         compress_hess=compress_hess,
+                         comm_bucket_elems=bucket_elems, seed=0)
 
 
 def _mesh(n_dev):
@@ -79,8 +86,9 @@ def _setup(tc, mesh):
     return train_step, init_fn, state, ssh, bsh
 
 
-def _trajectory(n_dev, opt, compress, compress_hess=False, steps=STEPS):
-    tc = _tc(opt, compress, compress_hess)
+def _trajectory(n_dev, opt, compress, compress_hess=False, steps=STEPS,
+                bucket_elems=None):
+    tc = _tc(opt, compress, compress_hess, bucket_elems)
     mesh = _mesh(n_dev)
     train_step, _, state, _, bsh = _setup(tc, mesh)
     src = _source()
@@ -99,10 +107,11 @@ def _trajectory(n_dev, opt, compress, compress_hess=False, steps=STEPS):
 
 
 def parity(args):
+    be = args.bucket_elems
     l1, _, progs1 = _trajectory(1, args.opt, args.compress,
-                                bool(args.compress_hess))
+                                bool(args.compress_hess), bucket_elems=be)
     l8, s8, progs8 = _trajectory(8, args.opt, args.compress,
-                                 bool(args.compress_hess))
+                                 bool(args.compress_hess), bucket_elems=be)
     out = {"losses_1": l1, "losses_8": l8,
            "programs_1": progs1, "programs_8": progs8}
     if args.compress:
@@ -163,15 +172,42 @@ def elastic(args):
             "programs_4": train_step._cache_size()}
 
 
+def hlo(args):
+    """Compile (don't run) the 8-device step monolithic vs bucketed and
+    audit peak single-collective buffer bytes by (kind, dtype)."""
+    from repro.launch.roofline import (collective_buffer_bytes,
+                                       collective_bytes)
+    mesh = _mesh(8)
+    sample = {k: jnp.asarray(v) for k, v in _source().batch_at(0).items()}
+    be = args.bucket_elems or 16 * 1024
+    out = {"bucket_elems": be}
+    for label, bucket in (("monolithic", 0), ("bucketed", be)):
+        tc = _tc("sophia_g", True, bucket_elems=bucket)
+        train_step, init_fn, ssh, bsh = compile_train_step(CFG, tc, mesh,
+                                                           sample)
+        state = jax.device_put(init_fn(jax.random.PRNGKey(0)), ssh)
+        batch = jax.device_put(sample, bsh)
+        txt = train_step.lower(state, batch,
+                               jnp.asarray(False)).compile().as_text()
+        out[label] = {"max": collective_buffer_bytes(txt),
+                      "sum": collective_bytes(txt)}
+    lay = make_engine(_tc("sophia_g", True)).layout(
+        jax.eval_shape(init_fn, jax.random.PRNGKey(0)).params)
+    out["shard_sizes"] = [int(n) for n in lay.shard_sizes]
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["parity", "elastic"], required=True)
+    ap.add_argument("--mode", choices=["parity", "elastic", "hlo"],
+                    required=True)
     ap.add_argument("--opt", default="sophia_g")
     ap.add_argument("--compress", type=int, default=0)
     ap.add_argument("--compress-hess", type=int, default=0)
+    ap.add_argument("--bucket-elems", type=int, default=None)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
-    out = parity(args) if args.mode == "parity" else elastic(args)
+    out = {"parity": parity, "elastic": elastic, "hlo": hlo}[args.mode](args)
     print("RESULT " + json.dumps(out))
 
 

@@ -1,0 +1,105 @@
+"""Subprocess driver for the 2-process ``jax.distributed`` tier.
+
+Run by tests/test_multiprocess.py.  Unlike tests/_distributed_driver.py
+(one process simulating 8 devices), every invocation here is ONE process
+of a real multi-process jax runtime on CPU (gloo collectives): the test
+launches N copies with the same ``--port`` and distinct ``--process-id``,
+they form a (num_devices, 1) mesh spanning the processes, and run the
+production ``compile_train_step`` wiring with int8-compressed bucketed
+gradient collectives.
+
+Modes (combine via flags):
+  * plain run      — train ``--steps`` steps, print per-step losses;
+  * ``--ckpt-dir`` — collective checkpoint at the end (process 0 writes,
+                     manifest digest cross-validated on restore);
+  * ``--resume``   — restore from the manifest first (the node-loss path:
+                     the test re-launches fewer processes than wrote the
+                     checkpoint and training must continue seamlessly);
+  * ``--force-devices N`` — single-process baseline with N simulated
+                     devices, for N-global-device loss parity against the
+                     N-process run.
+
+Prints one ``RESULT {json}`` line on process 0 (and on every process when
+single-process).
+"""
+import argparse
+import json
+import os
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--port", default=None)
+ap.add_argument("--num-processes", type=int, default=1)
+ap.add_argument("--process-id", type=int, default=0)
+ap.add_argument("--force-devices", type=int, default=0)
+ap.add_argument("--steps", type=int, default=6)
+ap.add_argument("--start-batch", type=int, default=0)
+ap.add_argument("--bucket-elems", type=int, default=None)
+ap.add_argument("--ckpt-dir", default=None)
+ap.add_argument("--resume", action="store_true")
+args = ap.parse_args()
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if args.force_devices:
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --xla_force_host_platform_device_count="
+                                 f"{args.force_devices}").strip()
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.mesh import initialize_distributed  # noqa: E402
+
+if args.num_processes > 1:
+    initialize_distributed(f"127.0.0.1:{args.port}", args.num_processes,
+                           args.process_id)
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.gpt2 import GPT2_TINY  # noqa: E402
+from repro.data import DataConfig, make_source  # noqa: E402
+from repro.launch.train import (_put_tree, build_mesh,  # noqa: E402
+                                compile_train_step)
+from repro.train import TrainerConfig, checkpoint as ckpt  # noqa: E402
+
+CFG = dataclasses.replace(GPT2_TINY, dtype="float32")
+HESS_INTERVAL = 3
+
+tc = TrainerConfig(optimizer="sophia_g", peak_lr=1e-3, total_steps=100,
+                   warmup_steps=2, hess_interval=HESS_INTERVAL,
+                   hess_subbatch=4, compress_grads=True,
+                   comm_bucket_elems=args.bucket_elems, seed=0)
+src = make_source(DataConfig(seq_len=32, global_batch=8,
+                             vocab_size=CFG.vocab_size, seed=0))
+sample = {k: jnp.asarray(v) for k, v in src.batch_at(0).items()}
+
+mesh = build_mesh()
+train_step, init_fn, ssh, bsh = compile_train_step(CFG, tc, mesh, sample)
+
+if args.resume:
+    like = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    state, start = ckpt.restore_resharded(args.ckpt_dir, like, shardings=ssh)
+else:
+    state = _put_tree(init_fn(jax.random.PRNGKey(0)), ssh)
+    start = args.start_batch
+
+losses = []
+for t in range(start, start + args.steps):
+    batch = _put_tree(
+        {k: jnp.asarray(v) for k, v in src.batch_at(t).items()}, bsh)
+    state, metrics = train_step(
+        state, batch, jnp.asarray(t % HESS_INTERVAL == 0))
+    losses.append(float(metrics["loss"]))
+
+if args.ckpt_dir and not args.resume:
+    ckpt.save(args.ckpt_dir, start + args.steps, state)
+
+out = {"losses": losses, "start": int(start),
+       "process_count": jax.process_count(),
+       "global_devices": len(jax.devices()),
+       "manifest_digest": (ckpt.manifest_digest(args.ckpt_dir)
+                           if args.ckpt_dir else None)}
+if jax.process_index() == 0:
+    print("RESULT " + json.dumps(out), flush=True)
