@@ -1,0 +1,296 @@
+"""Training attention: fused flash vs materialized-scores step time + memory.
+
+Measures one attention layer (x -> qkv -> attention -> out proj, loss +
+grad) across an (S x window x softcap) grid for the two training routes
+(``models.layers.train_attention``):
+
+  * ``impl="flash"``    the Pallas fused kernel (custom_vjp bwd), the
+                        ``TrainerConfig.fused_attn`` default
+  * ``impl="full"``     the XLA materialized-scores reference path
+
+and records per cell:
+
+  * ``ms``               wall time per loss+grad call (best of reps)
+  * ``temp_bytes``       XLA's compiled peak temp allocation
+  * ``max_buffer_numel`` largest buffer in the optimized HLO
+  * ``has_score_buffer`` whether any buffer of >= S*S elements survives —
+                         the (.., S, S) fp32 score residency the fused
+                         path exists to eliminate
+  * ``model_hbm_bytes``  the analytic traffic model
+                         (kernels.flash_attention.attention_hbm_bytes_*)
+  * ``bq/bk/schedule``   the autotuned block config for flash cells
+
+plus an end-to-end train smoke (GPT2_TINY, sophia_g + Hutchinson) with
+``fused_attn`` on/off, asserting via ``KERNEL_CALLS`` that all four flash
+kernels (fwd, dQ, dKV, jvp rule) actually traced — no silent fallback.
+Emits ``benchmarks/BENCH_attn.json``.
+
+The ``ok`` block fails the run (exit 1) if any flash cell keeps an (S, S)
+score buffer, loses to the unfused path on wall time, or fails to shrink
+the max live buffer; ``--baseline PATH`` additionally diffs a fresh run
+against the committed JSON and fails on a >15% step-time regression or
+ANY max-live-buffer growth (the nightly CI job).
+
+Note: on CPU the Pallas kernel runs in interpret mode (grid unrolled into
+the jit, auto-clamped to <= 64 cells), so absolute wall times are NOT
+hardware-representative — the grid starts at S=1024 because that is where
+streaming beats materialization even under the interpreter; on a real
+backend the crossover sits far lower.  The fused-vs-unfused comparison is
+apples-to-apples (same backend, same compiled-program measurement) and
+the residency audit is exact.
+"""
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.autotune import get_tuned_attn
+from repro.kernels.flash_attention import (attention_hbm_bytes_train_flash,
+                                           attention_hbm_bytes_unfused)
+from repro.kernels.fused_ce import KERNEL_CALLS, _interpret_default
+from repro.models.common import ModelConfig
+from repro.models.layers import train_attention
+
+_SHAPE = re.compile(r"(?:f32|f16|bf16|s32|u32|pred|s8|u8)\[([0-9,]+)\]")
+
+# one attention layer's dims; hd << S so legitimate (B, H, S, hd)
+# activations never collide with the S*S score-residency threshold
+B, H, HKV, HD = 2, 4, 2, 64
+D = H * HD
+
+
+def _max_buffer_numel(hlo_text: str) -> int:
+    best = 0
+    for dims in _SHAPE.findall(hlo_text):
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        best = max(best, n)
+    return best
+
+
+def _mk_cfg(softcap):
+    return ModelConfig(name="attn-bench", family="dense", n_layers=1,
+                       d_model=D, n_heads=H, n_kv_heads=HKV, d_ff=4 * D,
+                       vocab_size=512, dtype="float32",
+                       attn_logit_softcap=softcap)
+
+
+def prepare_attn_stage(S, window, softcap, impl):
+    """Compile + audit one grid cell; defer timing to the caller.
+
+    Returns ``(row, run)``; the driver interleaves ``run`` calls across
+    impls within a cell so machine-speed drift hits both equally."""
+    cfg = _mk_cfg(softcap)
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (B, S, D), jnp.float32)
+    p = {"wq": 0.05 * jax.random.normal(ks[1], (D, H * HD), jnp.float32),
+         "wk": 0.05 * jax.random.normal(ks[2], (D, HKV * HD), jnp.float32),
+         "wv": 0.05 * jax.random.normal(ks[3], (D, HKV * HD), jnp.float32),
+         "wo": 0.05 * jax.random.normal(ks[4], (H * HD, D), jnp.float32)}
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+
+    tuned = None
+    if impl == "flash":
+        # the roofline pick flash_attention resolves at trace time — so a
+        # regression is attributable to tuning vs kernel changes
+        tuned = get_tuned_attn(B, H, HKV, S, S, HD, dtype="float32",
+                               causal=True, softcap=softcap,
+                               interpret=_interpret_default())
+
+    def f(p_, x_):
+        o = train_attention(p_, x_, cfg, positions, window=window,
+                            impl=impl)
+        return jnp.sum(o * o)
+
+    g = jax.jit(jax.value_and_grad(f, argnums=(0, 1)))
+    compiled = g.lower(p, x).compile()
+    temp = int(compiled.memory_analysis().temp_size_in_bytes)
+    max_numel = _max_buffer_numel(compiled.as_text())
+    jax.block_until_ready(g(p, x))
+    model_bytes = (attention_hbm_bytes_train_flash(B, H, HKV, S, HD,
+                                                   bytes_per_el=4)
+                   if impl == "flash" else
+                   attention_hbm_bytes_unfused(B, H, S, HD, passes=5))
+    row = {"S": S, "window": window, "softcap": softcap, "impl": impl,
+           "temp_bytes": temp, "max_buffer_numel": max_numel,
+           "has_score_buffer": bool(max_numel >= S * S),
+           "model_hbm_bytes": int(model_bytes)}
+    if tuned is not None:
+        row.update(bq=tuned.bq, bk=tuned.bk, schedule=tuned.schedule,
+                   tuned_source=tuned.source)
+
+    def run():
+        t0 = time.perf_counter()
+        jax.block_until_ready(g(p, x))
+        return time.perf_counter() - t0
+
+    return row, run
+
+
+def bench_train_smoke(steps=6):
+    """Full train-step wall time, ``fused_attn`` on vs off.
+
+    GPT2_TINY at its full 256-token context, sophia_g with the Hutchinson
+    estimator so the refresh crosses the kernel's custom_jvp twin; the
+    fused run clears and then checks ``KERNEL_CALLS`` to prove all four
+    flash kernels traced (no chunked/full fallback)."""
+    from repro.configs.gpt2 import GPT2_TINY
+    from repro.data import DataConfig, make_source
+    from repro.train import TrainerConfig, train_loop
+
+    out = {}
+    for fused in (False, True):
+        if fused:
+            KERNEL_CALLS.clear()
+        src = make_source(DataConfig(seq_len=256, global_batch=4,
+                                     vocab_size=512, seed=0))
+        tc = TrainerConfig(optimizer="sophia_g", peak_lr=3e-4,
+                           total_steps=steps, hess_interval=3,
+                           hess_subbatch=4, estimator="hutchinson",
+                           seed=0, fused_attn=fused)
+        # steps 0 (hot-path compile) and 1 (first compiled refresh) are
+        # dropped so the gate measures steady state, not compile time
+        stamps = [time.perf_counter()]
+        _, hist = train_loop(
+            GPT2_TINY, tc, src, num_steps=steps,
+            callback=lambda *_: stamps.append(time.perf_counter()))
+        deltas = [b - a for a, b in zip(stamps[2:-1], stamps[3:])]
+        tag = "fused" if fused else "unfused"
+        out[f"{tag}_ms"] = 1e3 * sum(deltas) / len(deltas)
+        out[f"{tag}_loss_final"] = hist[-1]["loss"]
+    out["flash_kernel_calls"] = {k: KERNEL_CALLS[k] for k in
+                                 ("attn_fwd", "attn_bwd_dq",
+                                  "attn_bwd_dkv", "attn_jvp_rule")}
+    return out
+
+
+def diff_vs_baseline(report, baseline_path, *, ms_tol=1.15):
+    """Nightly regression diff: fresh ``report`` vs the committed JSON.
+
+    Fails (returns a non-empty list of reasons) on a >15% step-time
+    regression in any matching cell or the train smoke, or on ANY growth
+    of a cell's max live buffer."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    key = lambda r: (r["S"], r["window"], r["softcap"], r["impl"])  # noqa: E731
+    bcells = {key(r): r for r in base["attn_stage"]}
+    fails = []
+    for r in report["attn_stage"]:
+        b = bcells.get(key(r))
+        if b is None:
+            continue  # new cell: no baseline to regress against
+        cell = (f"S={r['S']} win={r['window']} cap={r['softcap']} "
+                f"{r['impl']}")
+        if r["ms"] > b["ms"] * ms_tol:
+            fails.append(f"{cell}: ms {r['ms']:.2f} > {ms_tol}x baseline "
+                         f"{b['ms']:.2f}")
+        if r["max_buffer_numel"] > b["max_buffer_numel"]:
+            fails.append(f"{cell}: max live buffer grew "
+                         f"{b['max_buffer_numel']:,} -> "
+                         f"{r['max_buffer_numel']:,} elements")
+    bt, nt = base.get("train_smoke", {}), report["train_smoke"]
+    for k in ("unfused_ms", "fused_ms"):
+        if k in bt and nt[k] > bt[k] * ms_tol:
+            fails.append(f"train smoke {k}: {nt[k]:.1f} > {ms_tol}x "
+                         f"baseline {bt[k]:.1f}")
+    return fails
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="diagonal of the grid + fewer reps (nightly CI)")
+    ap.add_argument("--out", default="benchmarks/BENCH_attn.json")
+    ap.add_argument("--baseline", default=None,
+                    help="diff against a committed BENCH_attn.json and "
+                         "fail on >15%% step time or any max-live-buffer "
+                         "regression (nightly CI)")
+    args = ap.parse_args()
+
+    seqs = (1024, 2048)
+    if args.smoke:
+        combos, reps = ((None, None), (128, 8.0)), 3
+    else:
+        combos = ((None, None), (None, 8.0), (128, None), (128, 8.0))
+        reps = 5
+
+    rows = []
+    for S in seqs:
+        for window, softcap in combos:
+            cells = [(impl, *prepare_attn_stage(S, window, softcap, impl))
+                     for impl in ("full", "flash")]
+            best = {impl: float("inf") for impl, _, _ in cells}
+            for _ in range(reps):
+                for impl, _, run in cells:
+                    best[impl] = min(best[impl], run())
+            for impl, r, _ in cells:
+                r["ms"] = best[impl] * 1e3
+                rows.append(r)
+                blk = (f" bq={r['bq']}/bk={r['bk']}/{r['schedule']}"
+                       if impl == "flash" else "")
+                print(f"S={S:5d} win={str(window):4s} cap={str(softcap):4s} "
+                      f"{impl:5s} max={r['max_buffer_numel']:>11,}el "
+                      f"score_buf={str(r['has_score_buffer']):5s} "
+                      f"{r['ms']:8.2f}ms{blk}", flush=True)
+
+    train = bench_train_smoke()
+    print(f"train smoke: unfused {train['unfused_ms']:.1f}ms/step, "
+          f"fused (default) {train['fused_ms']:.1f}ms/step, "
+          f"kernels {train['flash_kernel_calls']}")
+
+    by = lambda impl: [r for r in rows if r["impl"] == impl]  # noqa: E731
+    full_ms = {(r["S"], r["window"], r["softcap"]): r["ms"]
+               for r in by("full")}
+    full_buf = {(r["S"], r["window"], r["softcap"]): r["max_buffer_numel"]
+                for r in by("full")}
+    ok = {
+        # the acceptance criterion: no (.., S, S) score residency on the
+        # fused path at any grid point
+        "flash_score_free": not any(r["has_score_buffer"]
+                                    for r in by("flash")),
+        # sanity: the unfused path really does materialize it
+        "full_materializes": all(r["has_score_buffer"]
+                                 for r in by("full")),
+        # ... and the fused path's biggest live buffer is strictly smaller
+        "flash_shrinks_live_buffer": all(
+            r["max_buffer_numel"]
+            < full_buf[(r["S"], r["window"], r["softcap"])]
+            for r in by("flash")),
+        # the tentpole's exit criterion: fused <= unfused wall time in
+        # every grid cell
+        "flash_beats_full": all(
+            r["ms"] <= full_ms[(r["S"], r["window"], r["softcap"])]
+            for r in by("flash")),
+        # the trainer default actually ran all four flash kernels
+        "train_smoke_flash_engaged": all(
+            v > 0 for v in train["flash_kernel_calls"].values()),
+        # same objective being optimized (route parity, loose: six steps
+        # of independent fp32 rounding)
+        "train_smoke_loss_close": abs(train["fused_loss_final"]
+                                      - train["unfused_loss_final"]) < 0.05,
+    }
+    report = {"smoke": args.smoke, "attn_stage": rows,
+              "train_smoke": train, "ok": ok}
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print("ok:", ok, "->", args.out)
+    if args.baseline:
+        fails = diff_vs_baseline(report, args.baseline)
+        for msg in fails:
+            print("REGRESSION:", msg)
+        if fails:
+            raise SystemExit(1)
+    if not all(ok.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

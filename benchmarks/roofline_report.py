@@ -3,6 +3,12 @@
 Reads results/dryrun_single.json (+ _multi), prints the per-cell three-term
 roofline, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness, and a
 one-line what-would-help note.
+
+For train cells it also prints the per-stage kernel overlays (the Pallas
+calls are opaque to XLA's cost model, so the dry-run t_memory charges the
+UNFUSED path for both): ``loss_stage_seconds`` (fused CE) and
+``attention_stage_seconds`` (flash attention) fused-vs-unfused, i.e. how
+much of the cell's memory term each kernel deletes.
 """
 import json
 import os
@@ -52,10 +58,48 @@ def report(rows, tag):
     return out
 
 
+def stage_overlays(rows, tag):
+    """Fused-vs-unfused kernel-stage overlay per train cell (analytic —
+    Pallas kernels never appear in the dry-run HLO)."""
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES
+    from repro.launch.roofline import (attention_stage_seconds,
+                                       loss_stage_seconds)
+    out = []
+    for r in rows:
+        if r.get("skipped") or r.get("error"):
+            continue
+        sh = SHAPES.get(r.get("shape") or "", {})
+        if sh.get("kind") != "train":
+            continue
+        cfg = get_config(r["arch"])
+        B, S = sh["batch"], sh["seq"]
+        loss_f = loss_stage_seconds(B * S, cfg.d_model, cfg.padded_vocab,
+                                    fused=True)
+        loss_u = loss_stage_seconds(B * S, cfg.d_model, cfg.padded_vocab,
+                                    fused=False)
+        attn_f = cfg.n_layers * attention_stage_seconds(
+            B, cfg.n_heads, cfg.n_kv_heads, S, cfg.hd, fused=True)
+        attn_u = cfg.n_layers * attention_stage_seconds(
+            B, cfg.n_heads, cfg.n_kv_heads, S, cfg.hd, fused=False)
+        csv_line(
+            f"roofline.{tag}.{r['arch']}.{r['shape']}.stages",
+            (loss_u - loss_f + attn_u - attn_f) * 1e6,
+            f"loss_fused={loss_f:.4f};loss_unfused={loss_u:.4f};"
+            f"attn_fused={attn_f:.4f};attn_unfused={attn_u:.4f};"
+            f"t_memory={r['t_memory_s']:.4f}")
+        out.append({"arch": r["arch"], "shape": r["shape"],
+                    "loss_fused_s": loss_f, "loss_unfused_s": loss_u,
+                    "attn_fused_s": attn_f, "attn_unfused_s": attn_u})
+    return out
+
+
 def main(quick=False):
     single = report(load("dryrun_single.json"), "1pod")
     multi = report(load("dryrun_multi.json"), "2pod")
-    return {"single_cells": len(single), "multi_cells": len(multi)}
+    stages = stage_overlays(single, "1pod")
+    return {"single_cells": len(single), "multi_cells": len(multi),
+            "stage_overlays": len(stages)}
 
 
 if __name__ == "__main__":

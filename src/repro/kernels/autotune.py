@@ -228,10 +228,12 @@ def _save_disk() -> None:
 
 def clear_memory_cache() -> None:
     """Forget in-process picks (tests); the disk cache is untouched."""
-    global _DISK_LOADED
+    global _DISK_LOADED, _ATTN_DISK_LOADED
     with _LOCK:
         _MEM.clear()
         _DISK_LOADED = False
+        _MEM_ATTN.clear()
+        _ATTN_DISK_LOADED = False
 
 
 def drop_entry(key: str) -> None:
@@ -354,3 +356,269 @@ def tune_shape(N: int, D: int, Vp: int, *, dtype="float32",
     return get_tuned(N, D, Vp, dtype=dtype, transpose_w=transpose_w,
                      softcap=softcap, norm=norm, interpret=interpret,
                      measure=True, refresh=refresh)
+
+
+# ===========================================================================
+# flash-attention tuning (kernels/flash_attention.py)
+#
+# Same three-stage design as the CE tuner: divisor candidates filtered by a
+# VMEM working-set budget, the analytic roofline (with an exact causal
+# block-band count, since the "skip" schedule prunes out-of-band cells),
+# optional measured refinement, and a separate persistent cache (only
+# measured winners are written).  Keys deliberately exclude the sliding
+# window: it is traced at call time (transformer.layer_windows), so one
+# tuning decision per (shape, causal, softcap, dtype, backend) serves every
+# window the layer stack produces.
+
+ATTN_CACHE_VERSION = 1
+_MEM_ATTN: dict = {}
+_ATTN_DISK_LOADED = False
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedAttn:
+    """One attention tuning decision: (block_q, block_k, schedule) plus
+    provenance ("seed" | "roofline" | "measured")."""
+    bq: int
+    bk: int
+    schedule: str                 # "skip" | "dense"
+    source: str
+    predicted_ms: float = 0.0
+    measured_ms: float | None = None
+
+
+def attn_cache_path() -> str:
+    return os.environ.get(
+        "REPRO_FLASH_ATTN_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "flash_attn_autotune.json"))
+
+
+def attn_cache_key(B, H, Hkv, Sq, Sk, hd, *, dtype, causal, softcap,
+                   backend) -> str:
+    dt = np.dtype(dtype).name if not isinstance(dtype, str) else dtype
+    return (f"B{B}-H{H}-Hkv{Hkv}-Sq{Sq}-Sk{Sk}-hd{hd}-{dt}-"
+            f"{'causal' if causal else 'bidi'}-"
+            f"cap{softcap if softcap else 0}-{backend}")
+
+
+def attn_candidate_blocks(Sq: int, Sk: int, hd: int, *, bytes_el: int,
+                          interpret: bool) -> list:
+    """All legal (bq, bk, schedule) triples: divisor blocks, VMEM
+    working-set filtered (real backend) or tile-size capped (interpret)."""
+    qq = 8 if Sq % 8 == 0 else 1
+    qk = 8 if Sk % 8 == 0 else 1
+    cands = []
+    for bq in _divisors(Sq, qq, Sq):
+        for bk in _divisors(Sk, qk, Sk):
+            if interpret:
+                if bq * bk > INTERPRET_TILE_ELEMS:
+                    continue
+            else:
+                # double-buffered q/k/v tiles + fp32 score tile + the
+                # larger of the fwd/bwd fp32 accumulators
+                ws = 2 * bytes_el * (bq + 2 * bk) * hd \
+                    + 4 * (bq * bk + (bq + 2 * bk) * hd)
+                if ws > VMEM_BUDGET_BYTES:
+                    continue
+            cands.append((bq, bk, "dense"))
+            cands.append((bq, bk, "skip"))
+    if interpret:
+        # never the whole score matrix in one tile: a (Sq, Sk) block is
+        # exactly the residency the kernel exists to avoid, and measured
+        # interpret wall time shows sub-matrix tiles cost nothing (band
+        # skipping pays for the extra dispatches).  Keep the full tile
+        # only when it is the sole legal choice (tiny Sq/Sk).
+        sub = [c for c in cands if c[0] * c[1] < Sq * Sk]
+        if sub:
+            cands = sub
+    return cands
+
+
+def _attn_band_cells(Sq, Sk, bq, bk, causal) -> float:
+    """In-band (i, j) grid cells per (batch, head) for the causal band
+    (window unknown at tune time -> not narrowed)."""
+    n_q, n_k = Sq // bq, Sk // bk
+    if not causal:
+        return float(n_q * n_k)
+    i = np.arange(n_q)
+    hi = np.minimum(n_k - 1, ((i + 1) * bq - 1) // bk)
+    return float(np.sum(hi + 1))
+
+
+def attn_predict_seconds(B, H, Hkv, Sq, Sk, hd, bq, bk, schedule, *,
+                         bytes_el, causal, interpret) -> float:
+    """Analytic cost of one fused fwd + bwd (dQ + dKV) at this tiling.
+
+    "skip" computes (and DMAs) only in-band cells; "dense" streams and
+    computes the full grid, relying on masking.  Interpret mode charges
+    per-cell dispatch overhead for every grid cell of all three kernels —
+    pl.when saves arithmetic but not dispatch."""
+    from ..launch.roofline import HBM_BW, PEAK_FLOPS
+
+    n_q, n_k = Sq // bq, Sk // bk
+    band = _attn_band_cells(Sq, Sk, bq, bk, causal)
+    full = float(n_q * n_k)
+    cells = band if schedule == "skip" else full
+    tile = float(bq * bk * hd)
+    f_fwd = B * H * 4.0 * tile * cells
+    f_dq = B * H * 6.0 * tile * cells
+    f_dkv = B * H * 8.0 * tile * cells
+
+    if interpret:
+        flops = f_fwd + f_dq + f_dkv
+        grid_cells = 3 * B * H * n_q * n_k
+        return flops / CPU_FLOPS + grid_cells * CELL_OVERHEAD_S
+
+    be = bytes_el
+    q_pl = B * H * Sq * hd * be            # one (B, H, Sq, hd) plane
+    kv_pl = B * Hkv * Sk * hd * be         # one (B, Hkv, Sk, hd) plane
+    lse_b = 4 * B * H * Sq
+    kv_stream = 2 * be * B * H * cells * bk * hd       # k+v per in-band cell
+    q_stream = 2 * be * B * H * cells * bq * hd        # q+do per in-band cell
+    passes = [
+        (f_fwd, 2 * q_pl + kv_stream + lse_b),
+        (f_dq, 3 * q_pl + kv_stream + 2 * lse_b),
+        (f_dkv, 4 * kv_pl + q_stream + 2 * lse_b),
+    ]
+    return sum(max(f / PEAK_FLOPS, b / HBM_BW) for f, b in passes)
+
+
+def _load_attn_disk() -> None:
+    global _ATTN_DISK_LOADED
+    if _ATTN_DISK_LOADED:
+        return
+    _ATTN_DISK_LOADED = True
+    try:
+        with open(attn_cache_path()) as f:
+            blob = json.load(f)
+    except (OSError, ValueError):
+        return
+    if blob.get("version") != ATTN_CACHE_VERSION:
+        return
+    for k, e in blob.get("entries", {}).items():
+        _MEM_ATTN.setdefault(k, TunedAttn(**e))
+
+
+def _save_attn_disk() -> None:
+    path = attn_cache_path()
+    entries = {k: dataclasses.asdict(t) for k, t in _MEM_ATTN.items()
+               if t.source == "measured"}
+    blob = {"version": ATTN_CACHE_VERSION, "entries": entries}
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + f".tmp{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass
+
+
+def _measure_attn_ms(B, H, Hkv, Sq, Sk, hd, bq, bk, schedule, *, dtype,
+                     causal, softcap, interpret) -> float:
+    """Median wall-clock (ms) of one jitted value_and_grad through the
+    flash kernel at this tiling, on synthetic operands."""
+    import jax
+    import jax.numpy as jnp
+
+    from .flash_attention import flash_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, Sk, hd),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Sk, hd),
+                          jnp.float32).astype(dtype)
+
+    def f(q, k, v):
+        o = flash_attention(q, k, v, causal=causal, softcap=softcap,
+                            block_q=bq, block_k=bk, schedule=schedule,
+                            interpret=interpret)
+        return jnp.sum(o.astype(jnp.float32) ** 2)
+
+    g = jax.jit(jax.value_and_grad(f, argnums=(0, 1, 2)))
+    jax.block_until_ready(g(q, k, v))          # compile
+    ts = []
+    for _ in range(MEASURE_REPS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(g(q, k, v))
+        ts.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(ts))
+
+
+def get_tuned_attn(B, H, Hkv, Sq, Sk, hd, *, dtype, causal, softcap,
+                   interpret, measure: bool = False,
+                   refresh: bool = False) -> TunedAttn:
+    """The (bq, bk, schedule) to use for this attention shape.
+
+    Deterministic host-side Python (trace-safe), same precedence as
+    :func:`get_tuned`: in-memory -> disk (measured only) -> roofline
+    ranking, optionally measure-refined."""
+    backend = "interpret" if interpret else "tpu"
+    key = attn_cache_key(B, H, Hkv, Sq, Sk, hd, dtype=dtype, causal=causal,
+                         softcap=softcap, backend=backend)
+    with _LOCK:
+        _load_attn_disk()
+        if not refresh and key in _MEM_ATTN:
+            hit = _MEM_ATTN[key]
+            if hit.source == "measured" or not measure:
+                return hit
+
+    bytes_el = _dtype_bytes(dtype)
+    cands = attn_candidate_blocks(Sq, Sk, hd, bytes_el=bytes_el,
+                                  interpret=interpret)
+    if interpret:
+        # prefer candidates the interpret grid clamp wouldn't rewrite
+        from .flash_attention import INTERPRET_CELL_CAP
+        fit = [c for c in cands
+               if B * H * (Sq // c[0]) * (Sk // c[1])
+               <= INTERPRET_CELL_CAP]
+        cands = fit or cands
+    if not cands:
+        t = TunedAttn(min(Sq, 128), min(Sk, 128),
+                      "skip" if causal else "dense", "seed")
+        with _LOCK:
+            _MEM_ATTN[key] = t
+        return t
+
+    def _pred(c):
+        return attn_predict_seconds(B, H, Hkv, Sq, Sk, hd, c[0], c[1],
+                                    c[2], bytes_el=bytes_el, causal=causal,
+                                    interpret=interpret)
+
+    scored = sorted(cands, key=lambda c: (_pred(c), c))
+    best = scored[0]
+
+    if not measure:
+        t = TunedAttn(best[0], best[1], best[2], "roofline",
+                      predicted_ms=_pred(best) * 1e3)
+        with _LOCK:
+            _MEM_ATTN[key] = t
+        return t
+
+    timed = []
+    for c in scored[:MEASURE_TOP_K]:
+        ms = _measure_attn_ms(B, H, Hkv, Sq, Sk, hd, c[0], c[1], c[2],
+                              dtype=dtype, causal=causal, softcap=softcap,
+                              interpret=interpret)
+        timed.append((ms, c))
+    ms, win = min(timed, key=lambda t: (t[0], t[1]))
+    t = TunedAttn(win[0], win[1], win[2], "measured",
+                  predicted_ms=_pred(win) * 1e3, measured_ms=ms)
+    with _LOCK:
+        _MEM_ATTN[key] = t
+        _save_attn_disk()
+    return t
+
+
+def tune_attn_shape(B, H, Hkv, Sq, Sk, hd, *, dtype="float32", causal=True,
+                    softcap=None, interpret=None,
+                    refresh: bool = False) -> TunedAttn:
+    """Eager measured attention tuning (benchmarks, ``--retune``)."""
+    if interpret is None:
+        from .fused_ce import _interpret_default
+        interpret = _interpret_default()
+    return get_tuned_attn(B, H, Hkv, Sq, Sk, hd, dtype=dtype, causal=causal,
+                          softcap=softcap, interpret=interpret,
+                          measure=True, refresh=refresh)

@@ -79,26 +79,119 @@ def adahessian_step_refresh_ref(p, m, v, g, e, *, lr, flag, scale, beta1,
     return p2, m2, v_sel
 
 
-def flash_attention_ref(q, k, v, *, causal=True, scale=None):
-    """Plain softmax attention oracle for the flash kernel.
+def _attn_mask_ref(Sq, Sk, *, causal, window, q_offset):
+    """(Sq, Sk) bool attend-mask; ``window`` may be None, int, or traced."""
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m = kpos <= qpos
+    if window is not None:
+        m = m & (kpos > qpos - window)
+    return m
 
-    q: (B, H, S, hd); k, v: (B, Hkv, S, hd) GQA."""
+
+def _attn_probs_ref(q, k, *, causal, scale, window, softcap, q_offset):
+    """Shared fwd recompute: (s_raw, lse, p) with p row-normalized fp32,
+    mirroring the kernel's fp32 rounding points (mask = -1e30, denominator
+    floored at 1e-30)."""
     import math
 
-    B, H, S, hd = q.shape
-    Hkv = k.shape[1]
+    B, H, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
     G = H // Hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
     kx = jnp.repeat(k, G, axis=1)
-    vx = jnp.repeat(v, G, axis=1)
-    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
-                   kx.astype(jnp.float32)) * scale
-    if causal:
-        mask = jnp.tril(jnp.ones((S, S), bool))
-        s = jnp.where(mask[None, None], s, -1e30)
-    w = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhqk,bhkd->bhqd", w,
-                      vx.astype(jnp.float32)).astype(q.dtype)
+    s_raw = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       kx.astype(jnp.float32)) * scale
+    s = softcap * jnp.tanh(s_raw / softcap) if softcap is not None else s_raw
+    mask = _attn_mask_ref(Sq, Sk, causal=causal, window=window,
+                          q_offset=q_offset)
+    s = jnp.where(mask[None, None], s, -1e30)
+    m = s.max(-1, keepdims=True)
+    e = jnp.where(mask[None, None], jnp.exp(s - m), 0.0)
+    l = jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    lse = (m + jnp.log(l))[..., 0]
+    p = jnp.where(mask[None, None], jnp.exp(s - lse[..., None]), 0.0)
+    return s_raw, lse, p
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None, window=None,
+                        softcap=None, q_offset=0):
+    """Plain softmax attention oracle for the flash forward.
+
+    q: (B, H, Sq, hd); k, v: (B, Hkv, Sk, hd) GQA.  Returns
+    (o in q.dtype, lse (B, H, Sq) fp32) — the kernel's two outputs."""
+    G = q.shape[1] // k.shape[1]
+    _, lse, p = _attn_probs_ref(q, k, causal=causal, scale=scale,
+                                window=window, softcap=softcap,
+                                q_offset=q_offset)
+    vx = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vx)
+    return o.astype(q.dtype), lse
+
+
+def flash_attention_grads_ref(q, k, v, g, *, causal=True, scale=None,
+                              window=None, softcap=None, q_offset=0):
+    """Closed-form (dq, dk, dv) oracle mirroring the backward kernels'
+    fp32 math: ``delta`` from the *rounded* forward output (the kernel's
+    residual), ``p = exp(z - lse)``, softcap chain on the raw scores."""
+    import math
+
+    B, H, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    s_raw, lse, p = _attn_probs_ref(q, k, causal=causal, scale=scale,
+                                    window=window, softcap=softcap,
+                                    q_offset=q_offset)
+    kx = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vx = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    o32 = jnp.einsum("bhqk,bhkd->bhqd", p, vx)
+    o_r = o32.astype(q.dtype).astype(jnp.float32)
+    do = g.astype(jnp.float32)
+    delta = (do * o_r).sum(-1, keepdims=True)
+    ds = p * (jnp.einsum("bhqd,bhkd->bhqk", do, vx) - delta)
+    if softcap is not None:
+        ds = ds * (1.0 - jnp.tanh(s_raw / softcap) ** 2)
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, kx) * scale
+    q32 = q.astype(jnp.float32)
+    dkx = jnp.einsum("bhqk,bhqd->bhkd", ds, q32) * scale
+    dvx = jnp.einsum("bhqk,bhqd->bhkd", p, do)
+    dk = dkx.reshape(B, Hkv, G, Sk, hd).sum(2)
+    dv = dvx.reshape(B, Hkv, G, Sk, hd).sum(2)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def flash_attention_jvp_ref(q, k, v, dq, dk, dv, *, causal=True, scale=None,
+                            window=None, softcap=None, q_offset=0):
+    """Forward-mode oracle for the custom_jvp twin's tangent:
+    ``do = (p * dz) @ v - rowsum(p * dz) * o + p @ dv`` with
+    ``dz = dcap * scale * (dq k^T + q dk^T)``, all fp32."""
+    import math
+
+    B, H, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    s_raw, lse, p = _attn_probs_ref(q, k, causal=causal, scale=scale,
+                                    window=window, softcap=softcap,
+                                    q_offset=q_offset)
+    kx = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vx = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    dkx = jnp.repeat(dk, G, axis=1).astype(jnp.float32)
+    dvx = jnp.repeat(dv, G, axis=1).astype(jnp.float32)
+    q32, dq32 = q.astype(jnp.float32), dq.astype(jnp.float32)
+    o32 = jnp.einsum("bhqk,bhkd->bhqd", p, vx)
+    dz = (jnp.einsum("bhqd,bhkd->bhqk", dq32, kx)
+          + jnp.einsum("bhqd,bhkd->bhqk", q32, dkx)) * scale
+    if softcap is not None:
+        dz = dz * (1.0 - jnp.tanh(s_raw / softcap) ** 2)
+    pdz = p * dz
+    do = (jnp.einsum("bhqk,bhkd->bhqd", pdz, vx)
+          - pdz.sum(-1, keepdims=True) * o32
+          + jnp.einsum("bhqk,bhkd->bhqd", p, dvx))
+    return do.astype(q.dtype)
 
 
 def decode_attention_ref(q, k_cache, v_cache, positions, *, scale=None,

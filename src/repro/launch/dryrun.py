@@ -61,11 +61,12 @@ def lower_cell(arch: str, shape_name: str, mesh, *, opt: str = "sophia_g",
                fused_loss: bool = False):
     """Returns (lowered, meta) for one (arch, shape) cell on ``mesh``.
 
-    ``fused_loss`` is explicitly False here (overriding the trainer
-    default): this harness lowers on the CPU host platform, where the
-    Pallas kernel runs in interpret mode and its grid unrolls at trace
-    time — at production vocab sizes that makes lowering pathological.
-    Pass True only for small-vocab cells."""
+    ``fused_loss`` (and ``fused_attn``, below) is explicitly False here
+    (overriding the trainer default): this harness lowers on the CPU host
+    platform, where the Pallas kernels run in interpret mode and their
+    grids unroll at trace time — at production vocab sizes / sequence
+    lengths that makes lowering pathological.  Pass True only for
+    small-vocab cells."""
     cfg = get_config(arch)
     cell = input_specs(cfg, shape_name)
     assert cell is not None
@@ -79,7 +80,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, opt: str = "sophia_g",
     if cell.kind == "train":
         tc = TrainerConfig(optimizer=opt, remat=remat, attn_impl=attn_impl,
                            total_steps=100_000, grad_accum=grad_accum,
-                           state_dtype=state_dtype, fused_loss=fused_loss)
+                           state_dtype=state_dtype, fused_loss=fused_loss,
+                           fused_attn=False)
         init_fn, train_step = make_train_fns(cfg, tc)
         state_shape = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
         pspecs = partition_params(state_shape.params, mesh, fsdp=fsdp)

@@ -10,20 +10,29 @@ build a symbol table of instruction result sizes, and sum the *operand*
 sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
 collective-permute (counting async ``-start`` once, skipping ``-done``).
 
-Predicted vs measured (the fused-CE autotuner's pruning model)
---------------------------------------------------------------
-The same HBM roofline that :func:`loss_stage_seconds` evaluates per *path*
-(fused vs unfused) is evaluated per *candidate block config* by
-``kernels.autotune.predict_seconds``: each kernel pass contributes
-``max(flops / PEAK_FLOPS, bytes / HBM_BW)`` where the bytes term counts
-the tiles each grid arrangement actually streams (e.g. the backward
-re-reads W once per row-block, so shrinking ``bn`` multiplies W traffic).
-The prediction is deliberately coarse — it only has to *rank* candidates
-so the top-K survive to measurement (``MEASURE_TOP_K``); wall-clock
-timing of the survivors picks the winner, and ONLY measured entries
-persist to the on-disk cache.  Roofline-only mode (``measure=False``,
-used by the fast CI tier) stops after ranking: deterministic, hermetic,
-no timing noise in version control.
+Predicted vs measured (the kernel autotuners' pruning model)
+------------------------------------------------------------
+The same HBM roofline that :func:`loss_stage_seconds` and
+:func:`attention_stage_seconds` evaluate per *path* (fused vs unfused) is
+evaluated per *candidate block config* by
+``kernels.autotune.predict_seconds`` (fused CE) and
+``kernels.autotune.attn_predict_seconds`` (flash attention): each kernel
+pass contributes ``max(flops / PEAK_FLOPS, bytes / HBM_BW)`` where the
+bytes term counts the tiles each grid arrangement actually streams (e.g.
+the CE backward re-reads W once per row-block, so shrinking ``bn``
+multiplies W traffic; the attention cost counts only in-band tiles under
+the causal/window schedule).  The prediction is deliberately coarse — it
+only has to *rank* candidates so the top-K survive to measurement
+(``MEASURE_TOP_K``); wall-clock timing of the survivors picks the winner,
+and ONLY measured entries persist to the on-disk cache.  Roofline-only
+mode (``measure=False``, used by the fast CI tier) stops after ranking:
+deterministic, hermetic, no timing noise in version control.
+
+A Pallas call is opaque to XLA's cost model, so neither kernel appears in
+dry-run ``cost_analysis``; the stage overlays below are the analytic
+substitute (the former ``launch/flash_overlay.py`` structural measurement
+is folded into :func:`attention_stage_seconds` +
+``benchmarks/roofline_report.py``).
 """
 from __future__ import annotations
 
@@ -167,6 +176,31 @@ def loss_stage_seconds(batch_tokens: int, d_model: int, padded_vocab: int,
     fn = lm_loss_hbm_bytes_fused if fused else lm_loss_hbm_bytes_unfused
     return fn(batch_tokens, d_model, padded_vocab,
               bytes_h=bytes_act) / HBM_BW
+
+
+def attention_stage_seconds(B: int, H: int, Hkv: int, S: int, hd: int,
+                            *, fused: bool, train: bool = True,
+                            bytes_act: int = 2) -> float:
+    """HBM-bound time of ONE layer's attention middle (scores/softmax/AV)
+    — the roofline overlay for the flash kernel, analogous to
+    :func:`loss_stage_seconds` for the fused CE.
+
+    ``fused=False`` models the unfused path's materialized fp32 score
+    tiles: the backward re-reads/rewrites them, charged at ~5 crossings of
+    ``[B, H, S, block_k]`` strips (kernels/flash_attention.py's
+    ``attention_hbm_bytes_unfused``).  ``fused=True`` charges the flash
+    kernel's streaming floor: each of fwd/dQ/dKV reads Q,K,V once and
+    writes its output once — no ``O(S^2)`` term.  ``train=False`` drops
+    the backward passes (serving prefill)."""
+    from ..kernels.flash_attention import (attention_hbm_bytes_flash,
+                                           attention_hbm_bytes_train_flash,
+                                           attention_hbm_bytes_unfused)
+    if fused:
+        fn = (attention_hbm_bytes_train_flash if train
+              else attention_hbm_bytes_flash)
+        return fn(B, H, Hkv, S, hd, bytes_per_el=bytes_act) / HBM_BW
+    passes = 5 if train else 2
+    return attention_hbm_bytes_unfused(B, H, S, hd, passes=passes) / HBM_BW
 
 
 def kv_cache_slot_bytes(cfg, cache_len: int, *, kv_dtype=None) -> int:

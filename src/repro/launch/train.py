@@ -155,10 +155,18 @@ def main(argv=None):
                          "sampling (kernels/fused_ce.py, autotuned block "
                          "sizes); --no-fused-loss falls back to the "
                          "chunked jnp sweep")
+    ap.add_argument("--fused-attn", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="Pallas flash attention on the train path "
+                         "(kernels/flash_attention.py, autotuned blocks; "
+                         "the Hutchinson HVP rides its custom_jvp twin); "
+                         "--no-fused-attn falls back to the reference "
+                         "jnp attention")
     ap.add_argument("--retune", action="store_true",
-                    help="re-run measured fused-CE autotuning for this "
-                         "run's loss shape before training (ignores the "
-                         "on-disk cache; see README 'Fused loss')")
+                    help="re-run measured autotuning (fused-CE loss shape "
+                         "and flash-attention shape) for this run before "
+                         "training (ignores the on-disk caches; see README "
+                         "'Fused loss' / 'Training attention')")
     ap.add_argument("--compress-grads", action="store_true",
                     help="in-collective int8 all-reduce over the fsdp axis")
     ap.add_argument("--comm-bucket-elems", type=int, default=None,
@@ -215,6 +223,7 @@ def main(argv=None):
         hess_interval=args.hess_interval, hess_subbatch=args.hess_subbatch,
         grad_accum=args.grad_accum, remat=args.remat,
         fused_kernel=args.fused_kernel, fused_loss=args.fused_loss,
+        fused_attn=args.fused_attn,
         compress_grads=args.compress_grads,
         compress_hess=args.compress_hess,
         comm_bucket_elems=args.comm_bucket_elems,
@@ -236,6 +245,18 @@ def main(argv=None):
             print(f"[retune] fused CE {n_rows}x{cfg.d_model}x"
                   f"{cfg.padded_vocab}: bn={tuned.bn} bv={tuned.bv} "
                   f"schedule={tuned.schedule} ({tuned.source})")
+    if args.retune and tc.fused_attn and tc.attn_impl == "auto":
+        from ..kernels.autotune import tune_attn_shape
+        b_local = args.global_batch // max(1, args.grad_accum)
+        tuned_a = tune_attn_shape(
+            b_local, cfg.n_heads, cfg.n_kv_heads, args.seq_len,
+            args.seq_len, cfg.hd, dtype=cfg.dtype, causal=True,
+            softcap=cfg.attn_logit_softcap, refresh=True)
+        if p0:
+            print(f"[retune] flash attn B{b_local} H{cfg.n_heads} "
+                  f"S{args.seq_len} hd{cfg.hd}: bq={tuned_a.bq} "
+                  f"bk={tuned_a.bk} schedule={tuned_a.schedule} "
+                  f"({tuned_a.source})")
     src = make_source(DataConfig(
         seq_len=args.seq_len, global_batch=args.global_batch,
         vocab_size=cfg.vocab_size, seed=args.seed, source=args.data,

@@ -1,4 +1,6 @@
 from .common import ModelConfig
 from .registry import get_model
+from .layers import (get_decode_attn_impl, get_train_attn_impl,
+                     set_decode_attn_impl, set_train_attn_impl)
 from .loss import (get_lm_loss_impl, lm_loss, lm_loss_sampled,
                    set_lm_loss_impl, unembed_weights)

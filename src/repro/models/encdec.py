@@ -20,7 +20,7 @@ from .layers import (decode_attention,
                      decode_attention_slots, dense_init, embed,
                      full_attention, init_attention, init_embedding,
                      init_mlp, mlp, prefill_chunk_attention, rms_norm,
-                     unembed)
+                     train_attention, unembed)
 
 
 def _init_norm(cfg):
@@ -54,7 +54,8 @@ def init_params(cfg: ModelConfig, key) -> dict:
     }
 
 
-def encode(cfg: ModelConfig, params, frames, *, remat="none"):
+def encode(cfg: ModelConfig, params, frames, *, remat="none",
+           attn_impl="auto"):
     """frames: (B, S_src, d_model) stub embeddings -> encoder output."""
     dt = cfg.compute_dtype
     x = frames.astype(dt) @ params["frame_proj"].astype(dt)
@@ -63,12 +64,10 @@ def encode(cfg: ModelConfig, params, frames, *, remat="none"):
 
     def body(x, p):
         h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
-        if x.shape[1] > 4096:  # never materialize (S, S) at 32k frames
-            from .layers import chunked_attention
-            a = chunked_attention(p["attn"], h, cfg, positions, causal=False)
-        else:
-            a = full_attention(p["attn"], h, cfg, positions, causal=False)
-        x = x + a
+        # bidirectional; never materializes (S, S) at 32k frames on the
+        # flash/chunked routes
+        x = x + train_attention(p["attn"], h, cfg, positions, causal=False,
+                                impl=attn_impl)
         h = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
         from ..distributed.sharding import residual_axes
         return constrain(x + mlp(p["mlp"], h, cfg), *residual_axes()), None
@@ -88,7 +87,7 @@ def _cross_kv(p, enc_out, cfg: ModelConfig):
 
 
 def decode_train_hidden(cfg: ModelConfig, params, tokens, enc_out, *,
-                        remat="none", final_norm=True):
+                        remat="none", final_norm=True, attn_impl="auto"):
     """Teacher-forced decoder trunk. tokens (B, S_tgt) -> final-norm
     hidden (the loss paths skip the unembedding; models/loss.py)."""
     B, S = tokens.shape
@@ -97,11 +96,13 @@ def decode_train_hidden(cfg: ModelConfig, params, tokens, enc_out, *,
 
     def body(x, p):
         h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
-        x = x + full_attention(p["self_attn"], h, cfg, positions, causal=True)
+        x = x + train_attention(p["self_attn"], h, cfg, positions,
+                                causal=True, impl=attn_impl)
         h = rms_norm(x, p["ln_x"]["scale"], cfg.norm_eps)
         kv = _cross_kv(p["cross_attn"], enc_out, cfg)
-        x = x + full_attention(p["cross_attn"], h, cfg, positions,
-                               causal=False, kv_override=kv)
+        x = x + train_attention(p["cross_attn"], h, cfg, positions,
+                                causal=False, kv_override=kv,
+                                impl=attn_impl)
         h = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
         from ..distributed.sharding import residual_axes
         return constrain(x + mlp(p["mlp"], h, cfg), *residual_axes()), None
@@ -121,10 +122,11 @@ def decode_train(cfg: ModelConfig, params, tokens, enc_out, *, remat="none"):
 
 
 def forward_hidden(cfg: ModelConfig, params, tokens, *, frames=None,
-                   remat="none", final_norm=True, **_):
-    enc_out = encode(cfg, params, frames, remat=remat)
+                   remat="none", final_norm=True, attn_impl="auto", **_):
+    enc_out = encode(cfg, params, frames, remat=remat, attn_impl=attn_impl)
     return decode_train_hidden(cfg, params, tokens, enc_out, remat=remat,
-                               final_norm=final_norm), \
+                               final_norm=final_norm,
+                               attn_impl=attn_impl), \
         jnp.zeros((), jnp.float32)
 
 
@@ -136,22 +138,22 @@ def forward(cfg: ModelConfig, params, tokens, *, frames=None, remat="none",
 
 
 def loss_fn(cfg: ModelConfig, params, batch, *, remat="none",
-            loss_impl=None, **_):
+            loss_impl=None, attn_impl="auto", **_):
     from .loss import lm_loss
     hidden, aux = forward_hidden(cfg, params, batch["tokens"],
                                  frames=batch["frames"], remat=remat,
-                                 final_norm=False)
+                                 final_norm=False, attn_impl=attn_impl)
     ce, _ = lm_loss(cfg, params, hidden, batch["labels"],
                     batch.get("mask"), impl=loss_impl, pre_norm="rms")
     return ce + aux, {"ce": ce, "aux": aux}
 
 
 def sampled_loss_fn(cfg: ModelConfig, params, batch, rng, *, remat="none",
-                    loss_impl=None, **_):
+                    loss_impl=None, attn_impl="auto", **_):
     from .loss import lm_loss_sampled
     hidden, _ = forward_hidden(cfg, params, batch["tokens"],
                                frames=batch["frames"], remat=remat,
-                               final_norm=False)
+                               final_norm=False, attn_impl=attn_impl)
     return lm_loss_sampled(cfg, params, hidden, rng, batch.get("mask"),
                            impl=loss_impl, pre_norm="rms")
 

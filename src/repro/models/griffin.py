@@ -25,7 +25,7 @@ from .layers import (chunked_attention, decode_attention,
                      decode_attention_slots, dense_init, embed,
                      full_attention, init_attention, init_embedding,
                      init_mlp, mlp, rms_norm, slot_slice, slot_update,
-                     unembed)
+                     train_attention, unembed)
 
 RG_LRU_C = 8.0
 
@@ -158,14 +158,8 @@ def rec_block_apply(p, x, cfg: ModelConfig, state=None):
 
 def attn_block_apply(p, x, cfg: ModelConfig, positions, attn_impl="auto"):
     h = rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
-    S = x.shape[1]
-    if attn_impl == "chunked" or (attn_impl == "auto" and S > 4096):
-        a = chunked_attention(p["attn"], h, cfg, positions,
-                              window=cfg.local_window)
-    else:
-        a = full_attention(p["attn"], h, cfg, positions,
-                           window=cfg.local_window)
-    x = x + a
+    x = x + train_attention(p["attn"], h, cfg, positions,
+                            window=cfg.local_window, impl=attn_impl)
     hm = rms_norm(x, p["ln_mlp"]["scale"], cfg.norm_eps)
     from ..distributed.sharding import residual_axes
     return constrain(x + mlp(p["mlp"], hm, cfg), *residual_axes())

@@ -6,6 +6,28 @@ Conventions:
   * activations run in ``cfg.compute_dtype`` (bf16); norms/softmax/router in
     fp32; params stored in ``cfg.param_dtype`` (fp32).
   * every init function takes an explicit PRNG key (splittable, deterministic).
+
+Training attention has three routes, dispatched by :func:`train_attention`
+(``set_train_attn_impl`` sets the process default; the trainer overrides it
+per-call via ``TrainerConfig.attn_impl`` / ``fused_attn``):
+
+  * ``"flash"`` (the default train path) — the Pallas kernel family in
+    ``kernels/flash_attention.py``: fused online-softmax forward plus a
+    custom_vjp backward (dQ and dK/dV kernels), never materializing the
+    (S, S) score tensor.  ``"flash_jvp"`` is its custom_jvp twin for
+    forward-mode callers (Hutchinson's forward-over-reverse HVP).
+  * ``"full"`` — :func:`full_attention`, materialized fp32
+    (B, Hkv, G, Sq, Sk) scores; the reference semantics every other route
+    is tested against, and the dryrun/debug path.
+  * ``"chunked"`` — :func:`chunked_attention`, a lax.scan over KV blocks
+    with the same online softmax in jnp; the fallback for very long
+    sequences on backends where the kernel is unavailable.
+
+``"auto"`` keeps the historical heuristic: chunked above 4096 tokens,
+full otherwise.  All routes share the masking semantics of
+:func:`_causal_window_mask` (causal, sliding window, ``q_offset``) and the
+gemma2 logit softcap.  Decode-time attention is dispatched separately
+(``set_decode_attn_impl``: "xla" | "pallas").
 """
 from __future__ import annotations
 
@@ -154,10 +176,11 @@ def _causal_window_mask(Sq, Sk, q_offset, window):
 
 
 def full_attention(p, x, cfg: ModelConfig, positions, *, window=None,
-                   layer_scale=1.0, causal=True, kv_override=None):
-    """Materialized-scores attention (train/small-S path).
+                   layer_scale=1.0, causal=True, kv_override=None,
+                   q_offset=0):
+    """Materialized-scores attention (reference/debug path).
 
-    kv_override: (k, v, kv_positions) for cross-attention.
+    kv_override: (k, v) for cross-attention.
     """
     dt = x.dtype
     B, S, _ = x.shape
@@ -170,7 +193,7 @@ def full_attention(p, x, cfg: ModelConfig, positions, *, window=None,
     scale = layer_scale / math.sqrt(cfg.hd)
     scores = attention_scores_block(q, k, cfg, scale)   # (B,Hkv,G,S,Sk)
     if causal:
-        mask = _causal_window_mask(S, k.shape[1], 0, window)
+        mask = _causal_window_mask(S, k.shape[1], q_offset, window)
         scores = jnp.where(mask[None, None, None], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1).astype(dt)
     out = jnp.einsum("bkgst,btkh->bskgh", w, v)
@@ -179,7 +202,8 @@ def full_attention(p, x, cfg: ModelConfig, positions, *, window=None,
 
 
 def chunked_attention(p, x, cfg: ModelConfig, positions, *, window=None,
-                      layer_scale=1.0, kv_block: int = 1024, causal=True):
+                      layer_scale=1.0, kv_block: int = 1024, causal=True,
+                      q_offset=0):
     """Online-softmax attention, scanning KV blocks (32k+ prefill path).
 
     Never materializes the (S, S) score matrix: peak temp is
@@ -196,11 +220,14 @@ def chunked_attention(p, x, cfg: ModelConfig, positions, *, window=None,
     Hkv, G, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd
     qg = q.reshape(B, S, Hkv, G, hd)
 
+    kv_block = min(kv_block, S)           # short sequences: one block
+    while S % kv_block:                   # largest divisor <= requested
+        kv_block -= 1
     nb = S // kv_block
     k_blocks = k.reshape(B, nb, kv_block, Hkv, hd).transpose(1, 0, 2, 3, 4)
     v_blocks = v.reshape(B, nb, kv_block, Hkv, hd).transpose(1, 0, 2, 3, 4)
 
-    qpos = jnp.arange(S)[:, None]
+    qpos = jnp.arange(S)[:, None] + q_offset
 
     def body(carry, blk):
         m_run, l_run, acc = carry
@@ -231,6 +258,86 @@ def chunked_attention(p, x, cfg: ModelConfig, positions, *, window=None,
     out = (acc / jnp.maximum(l_f, 1e-30)[..., None]).astype(dt)
     out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, cfg.n_heads * cfg.hd)
     return out @ p["wo"].astype(dt)
+
+
+_TRAIN_ATTN_IMPLS = ("auto", "full", "chunked", "flash", "flash_jvp")
+_TRAIN_ATTN_IMPL = {"impl": "auto"}
+
+
+def set_train_attn_impl(impl: str) -> None:
+    """Process-default training attention route (see module docstring):
+    "flash" (Pallas custom_vjp kernel) | "flash_jvp" (custom_jvp twin) |
+    "full" | "chunked" | "auto" (S-heuristic).  Per-call ``impl`` /
+    ``attn_impl`` arguments other than "auto" take precedence."""
+    assert impl in _TRAIN_ATTN_IMPLS, impl
+    _TRAIN_ATTN_IMPL["impl"] = impl
+
+
+def get_train_attn_impl() -> str:
+    return _TRAIN_ATTN_IMPL["impl"]
+
+
+def _flash_attention_proj(p, x, cfg: ModelConfig, positions, *, window,
+                          layer_scale, causal, kv_override, q_offset,
+                          use_jvp):
+    """qkv -> rope -> fused Pallas attention -> output projection.
+
+    A traced ``layer_scale`` (attn_temperature_by_layer under scan) is
+    folded into q in fp32 so the kernel's scale stays static."""
+    from ..kernels.flash_attention import flash_attention
+
+    dt = x.dtype
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.rope and kv_override is None:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    if kv_override is not None:
+        k, v = kv_override
+    qt = q.transpose(0, 2, 1, 3)          # (B, H, S, hd)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if isinstance(layer_scale, (int, float)):
+        scale = float(layer_scale) / math.sqrt(cfg.hd)
+    else:
+        qt = (qt.astype(jnp.float32)
+              * jnp.asarray(layer_scale, jnp.float32)).astype(dt)
+        scale = 1.0 / math.sqrt(cfg.hd)
+    o = flash_attention(qt, kt, vt, causal=causal, scale=scale,
+                        window=window if causal else None,
+                        softcap=cfg.attn_logit_softcap, q_offset=q_offset,
+                        use_jvp=use_jvp)
+    out = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.hd)
+    return out @ p["wo"].astype(dt)
+
+
+def train_attention(p, x, cfg: ModelConfig, positions, *, window=None,
+                    layer_scale=1.0, causal=True, kv_override=None,
+                    q_offset=0, impl=None):
+    """Route one training attention call (see module docstring).
+
+    ``impl`` None or "auto" defers to the process default
+    (:func:`set_train_attn_impl`); an "auto" default keeps the historical
+    heuristic (chunked above 4096 tokens, else full)."""
+    if impl in (None, "auto"):
+        impl = _TRAIN_ATTN_IMPL["impl"]
+    assert impl in _TRAIN_ATTN_IMPLS, impl
+    if impl in ("flash", "flash_jvp"):
+        return _flash_attention_proj(
+            p, x, cfg, positions, window=window, layer_scale=layer_scale,
+            causal=causal, kv_override=kv_override, q_offset=q_offset,
+            use_jvp=impl == "flash_jvp")
+    if kv_override is not None:       # chunked has no cross-attention path
+        return full_attention(p, x, cfg, positions, window=window,
+                              layer_scale=layer_scale, causal=causal,
+                              kv_override=kv_override, q_offset=q_offset)
+    if impl == "chunked" or (impl == "auto" and x.shape[1] > 4096):
+        return chunked_attention(p, x, cfg, positions, window=window,
+                                 layer_scale=layer_scale, causal=causal,
+                                 q_offset=q_offset)
+    return full_attention(p, x, cfg, positions, window=window,
+                          layer_scale=layer_scale, causal=causal,
+                          q_offset=q_offset)
 
 
 def decode_attention(p, x, cfg: ModelConfig, k_cache, v_cache, position, *,

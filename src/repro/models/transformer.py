@@ -27,7 +27,8 @@ from .layers import (apply_rope, chunked_attention,
                      decode_attention, decode_attention_slots, dense_init,
                      embed, embed_init, full_attention, init_attention,
                      init_embedding, init_mlp, layer_norm, mlp,
-                     prefill_chunk_attention, rms_norm, unembed)
+                     prefill_chunk_attention, rms_norm, train_attention,
+                     unembed)
 from .moe import init_moe, moe_ffn
 
 # ---------------------------------------------------------------------------
@@ -126,12 +127,8 @@ def layer_scales(cfg: ModelConfig) -> jnp.ndarray:
 
 
 def _attn_dispatch(p, x, cfg, positions, window, scale, attn_impl):
-    S = x.shape[1]
-    if attn_impl == "chunked" or (attn_impl == "auto" and S > 4096):
-        return chunked_attention(p, x, cfg, positions, window=window,
-                                 layer_scale=scale)
-    return full_attention(p, x, cfg, positions, window=window,
-                          layer_scale=scale)
+    return train_attention(p, x, cfg, positions, window=window,
+                           layer_scale=scale, impl=attn_impl)
 
 
 def _dense_block(p, x, cfg, positions, window, scale, attn_impl):

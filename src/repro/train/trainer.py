@@ -97,6 +97,12 @@ class TrainerConfig:
     grad_accum: int = 1
     remat: str = "none"                # none | full | dots
     attn_impl: str = "auto"
+    fused_attn: bool = True            # Pallas flash attention on the train
+    #                                    path (kernels/flash_attention.py,
+    #                                    autotuned blocks; the Hutchinson
+    #                                    HVP rides its custom_jvp twin).
+    #                                    Only consulted while attn_impl is
+    #                                    "auto" — an explicit impl wins.
     fused_kernel: bool = False         # Pallas backend for the engine
     fused_loss: bool = True            # Pallas logits-free LM loss + GNB
     #                                    (kernels/fused_ce.py, autotuned
@@ -207,10 +213,17 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
     hess_compressor = GradCompressor() if tc.compress_hess else None
 
     loss_impl = "fused" if tc.fused_loss else None  # None -> module default
+    # fused_attn only applies while attn_impl is "auto"; an explicit impl
+    # ("full", "chunked", "flash", ...) always wins.  The Hutchinson HVP
+    # cannot differentiate through custom_vjp, so it rides the custom_jvp
+    # twin of the same kernel — mirroring fused_loss's "fused_jvp" route.
+    attn_impl = (tc.attn_impl if tc.attn_impl != "auto"
+                 else ("flash" if tc.fused_attn else "auto"))
+    hvp_attn_impl = "flash_jvp" if attn_impl == "flash" else attn_impl
 
     def loss_fn(params, batch):
         return model.loss_fn(cfg, params, batch, remat=tc.remat,
-                             attn_impl=tc.attn_impl, loss_impl=loss_impl)
+                             attn_impl=attn_impl, loss_impl=loss_impl)
 
     def init_fn(rng) -> TrainState:
         p_rng, s_rng = jax.random.split(jax.random.PRNGKey(tc.seed)
@@ -247,12 +260,12 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
                 def slf(p):
                     return model.sampled_loss_fn(
                         cfg, p, sub, rng, remat=tc.remat,
-                        attn_impl=tc.attn_impl, loss_impl="fused")
+                        attn_impl=attn_impl, loss_impl="fused")
                 g_sh, scale = gnb_ghat_flat_from_loss(slf, params, lay)
             else:
                 def lf(p):
                     return model.logits_fn(cfg, p, sub, remat=tc.remat,
-                                           attn_impl=tc.attn_impl)
+                                           attn_impl=attn_impl)
                 g_sh, scale = gnb_ghat_flat(lf, params, rng, lay,
                                             mask=sub.get("mask"))
             g_sh = compress(g_sh, crng)
@@ -265,14 +278,14 @@ def make_train_fns(cfg: ModelConfig, tc: TrainerConfig):
             hvp_impl = "fused_jvp" if tc.fused_loss else "chunked"
             def sf(p):
                 return model.loss_fn(cfg, p, sub, remat=tc.remat,
-                                     attn_impl=tc.attn_impl,
+                                     attn_impl=hvp_attn_impl,
                                      loss_impl=hvp_impl)[0]
             est = hutchinson_estimator_flat(sf, params, rng, lay)
             return compress(est, crng), 1.0
         if tc.estimator == "empirical_fisher":
             def sf(p):
                 return model.loss_fn(cfg, p, sub, remat=tc.remat,
-                                     attn_impl=tc.attn_impl,
+                                     attn_impl=attn_impl,
                                      loss_impl=loss_impl)[0]
             lead = jax.tree.leaves(sub)[0]
             n = lead.shape[0] * (lead.shape[1] if lead.ndim > 1 else 1)

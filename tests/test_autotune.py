@@ -44,6 +44,8 @@ def _fresh_tuner(monkeypatch, tmp_path):
     (never the user's ~/.cache)."""
     monkeypatch.setenv("REPRO_FUSED_CE_CACHE",
                        str(tmp_path / "autotune.json"))
+    monkeypatch.setenv("REPRO_FLASH_ATTN_CACHE",
+                       str(tmp_path / "attn_autotune.json"))
     clear_memory_cache()
     yield
     clear_memory_cache()
@@ -249,3 +251,92 @@ def test_hutchinson_traces_through_fused_jvp_rule():
     calls = kernel_calls()
     assert calls.get("jvp_rule", 0) >= 1, calls
     jax.block_until_ready(state)
+
+
+# ---------------------------------------------------------------------------
+# flash-attention tuner (same contracts, separate cache)
+
+ATTN = dict(B=2, H=4, Hkv=2, Sq=256, Sk=256, hd=32)
+ATTN_KW = dict(dtype="float32", causal=True, softcap=None, interpret=True)
+
+
+def test_attn_same_key_same_config():
+    a = autotune.get_tuned_attn(**ATTN, **ATTN_KW)
+    clear_memory_cache()
+    b = autotune.get_tuned_attn(**ATTN, **ATTN_KW)
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+    assert a.source == "roofline"
+    assert ATTN["Sq"] % a.bq == 0 and ATTN["Sk"] % a.bk == 0
+    assert a.schedule in ("skip", "dense")
+    # in-memory hit is the exact same decision object
+    assert autotune.get_tuned_attn(**ATTN, **ATTN_KW) == b
+
+
+def test_attn_roofline_only_touches_no_disk():
+    path = os.environ["REPRO_FLASH_ATTN_CACHE"]
+    autotune.get_tuned_attn(**ATTN, **ATTN_KW)
+    assert not os.path.exists(path)
+
+
+def test_attn_cache_is_separate_from_ce_cache():
+    """TunedAttn and TunedCE have disjoint fields — a shared JSON would
+    crash either loader, so the caches must be separate files."""
+    assert autotune.attn_cache_path() != autotune.cache_path()
+
+
+def test_attn_key_separates_configs():
+    keys = {autotune.attn_cache_key(2, 4, hkv, 256, 256, 32, dtype=dt,
+                                    causal=ca, softcap=sc, backend=be)
+            for hkv in (2, 4) for dt in ("float32", "bfloat16")
+            for ca in (True, False) for sc in (None, 20.0)
+            for be in ("interpret", "tpu")}
+    assert len(keys) == 32
+
+
+def test_attn_interpret_candidates_fit_cell_cap():
+    from repro.kernels.flash_attention import INTERPRET_CELL_CAP
+    t = autotune.get_tuned_attn(**ATTN, **ATTN_KW)
+    cells = (ATTN["Sq"] // t.bq) * (ATTN["Sk"] // t.bk)
+    assert ATTN["B"] * ATTN["H"] * cells <= INTERPRET_CELL_CAP
+
+
+def test_attn_predict_skip_beats_dense_when_causal():
+    """The roofline cost charges only in-band tiles under "skip": on a
+    multi-block causal grid it must price below "dense" (which streams the
+    full rectangle), on the real backend where cells aren't emulated."""
+    kw = dict(bytes_el=2, causal=True, interpret=False)
+    skip = autotune.attn_predict_seconds(8, 12, 4, 2048, 2048, 128,
+                                         256, 256, "skip", **kw)
+    dense = autotune.attn_predict_seconds(8, 12, 4, 2048, 2048, 128,
+                                          256, 256, "dense", **kw)
+    assert skip < dense
+
+
+@pytest.mark.slow
+def test_attn_measured_entry_persists_and_reloads():
+    t = autotune.tune_attn_shape(1, 2, 1, 128, 128, 32, interpret=True,
+                                 refresh=True)
+    assert t.source == "measured" and t.measured_ms is not None
+    assert os.path.exists(os.environ["REPRO_FLASH_ATTN_CACHE"])
+    clear_memory_cache()       # force the disk round-trip
+    t2 = autotune.get_tuned_attn(1, 2, 1, 128, 128, 32, **ATTN_KW)
+    assert t2 == t
+
+
+def test_attn_tuned_flash_bit_identical_across_tuner_runs():
+    """Tuner resolution is part of the numerics contract for attention
+    too: two independent resolutions give bit-identical outputs."""
+    from repro.kernels.flash_attention import flash_attention
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32)) * 0.5
+    k = jax.random.normal(ks[1], (1, 1, 128, 32)) * 0.5
+    v = jax.random.normal(ks[2], (1, 1, 128, 32)) * 0.5
+
+    def run():
+        return np.asarray(jax.jit(flash_attention)(q, k, v))
+
+    a = run()
+    clear_memory_cache()
+    jax.clear_caches()
+    b = run()
+    assert a.tobytes() == b.tobytes()

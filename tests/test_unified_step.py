@@ -196,9 +196,14 @@ def _two_program_loop(cfg, tc, src, steps):
     schedule = make_schedule(tc)
     clipper = clip_by_global_norm(tc.grad_clip)
     li = "fused" if tc.fused_loss else None
+    # same attention routing as make_train_fns: fused_attn -> flash on the
+    # grad path, the custom_jvp twin on the Hutchinson HVP
+    ai = (tc.attn_impl if tc.attn_impl != "auto"
+          else ("flash" if tc.fused_attn else "auto"))
+    hvp_ai = "flash_jvp" if ai == "flash" else ai
 
     def loss_fn(params, batch):
-        return model.loss_fn(cfg, params, batch, loss_impl=li)
+        return model.loss_fn(cfg, params, batch, loss_impl=li, attn_impl=ai)
 
     def grad_step(state, batch):
         (loss, _), grads = jax.value_and_grad(
@@ -220,18 +225,19 @@ def _two_program_loop(cfg, tc, src, steps):
             if tc.fused_loss:
                 g_sh, scale = gnb_ghat_flat_from_loss(
                     lambda p: model.sampled_loss_fn(cfg, p, sub, rng,
-                                                    loss_impl="fused"),
+                                                    loss_impl="fused",
+                                                    attn_impl=ai),
                     state.params, lay)
                 est_sh = tuple(g * g for g in g_sh)
             else:
                 est_sh, scale = gnb_estimator_sq_flat(
-                    lambda p: model.logits_fn(cfg, p, sub), state.params,
-                    rng, lay, mask=sub.get("mask"))
+                    lambda p: model.logits_fn(cfg, p, sub, attn_impl=ai),
+                    state.params, rng, lay, mask=sub.get("mask"))
         else:
             hvp_impl = "fused_jvp" if tc.fused_loss else "chunked"
             est_sh = hutchinson_estimator_flat(
-                lambda p: model.loss_fn(cfg, p, sub,
-                                        loss_impl=hvp_impl)[0],
+                lambda p: model.loss_fn(cfg, p, sub, loss_impl=hvp_impl,
+                                        attn_impl=hvp_ai)[0],
                 state.params, rng, lay)
             scale = 1.0
         opt_state = engine.update_hessian(state.opt_state, est_sh,
@@ -273,6 +279,28 @@ def test_unified_step_matches_two_program_loop_hutchinson():
     ~lr*rho per step.  Contract: >= 99.99% of coordinates within 3e-6,
     ALL within the old 2e-3."""
     s_two, s_uni = _check_unified_vs_two_program(_tc(estimator="hutchinson"))
+    a = np.asarray(jax.flatten_util.ravel_pytree(s_two.params)[0])
+    b = np.asarray(jax.flatten_util.ravel_pytree(s_uni.params)[0])
+    bad = np.abs(b - a) > (3e-6 + 1e-5 * np.abs(a))
+    assert bad.mean() <= 1e-4, \
+        f"{bad.sum()} / {bad.size} coordinates beyond 3e-6"
+
+
+def test_unified_step_matches_two_program_loop_fused_attn():
+    """Trajectory parity with the flash-attention train path (the
+    ``fused_attn=True`` default): 16 steps over 3 full Hessian-refresh
+    intervals, Hutchinson estimator — the HVP crosses the attention
+    custom_jvp rule AND the fused-CE jvp rule, with no chunked fallback
+    (KERNEL_CALLS: the chunked/full jnp paths never trace)."""
+    from repro.kernels.fused_ce import KERNEL_CALLS
+    tc = _tc(estimator="hutchinson", fused_attn=True)
+    KERNEL_CALLS.clear()
+    s_two, s_uni = _check_unified_vs_two_program(tc)
+    assert KERNEL_CALLS.get("attn_fwd", 0) > 0
+    assert KERNEL_CALLS.get("attn_bwd_dq", 0) > 0
+    assert KERNEL_CALLS.get("attn_bwd_dkv", 0) > 0
+    assert KERNEL_CALLS.get("attn_jvp_rule", 0) > 0, \
+        "Hutchinson HVP fell back off the flash custom_jvp twin"
     a = np.asarray(jax.flatten_util.ravel_pytree(s_two.params)[0])
     b = np.asarray(jax.flatten_util.ravel_pytree(s_uni.params)[0])
     bad = np.abs(b - a) > (3e-6 + 1e-5 * np.abs(a))
